@@ -1,0 +1,39 @@
+"""Shared benchmark helpers: timing + CSV output convention.
+
+Every benchmark prints ``name,us_per_call,derived`` rows (one per paper-table
+cell); `derived` carries the table's own metric (compression ratio, GB/s, ...).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+
+def time_fn(fn, *args, warmup: int = 1, iters: int = 3) -> float:
+    """Median wall-time per call in seconds (jit-warmed)."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out) if hasattr(out, "block_until_ready") or (
+            isinstance(out, (tuple, list))
+        ) else None
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        try:
+            jax.block_until_ready(out)
+        except Exception:
+            pass
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times))
+
+
+def emit(name: str, seconds: float, derived) -> None:
+    print(f"{name},{seconds * 1e6:.1f},{derived}")
+
+
+def throughput_gbs(nbytes: int, seconds: float) -> float:
+    return nbytes / max(seconds, 1e-12) / 1e9

@@ -1,0 +1,49 @@
+"""Paper Fig. 8: compression ratio — gpulz (default C=2048,S=2,W=128) vs
+gpulz-best (best over the Table-1 grid) vs CULZSS-style (single-byte LZSS,
+W=128 — the paper's apples-to-apples baseline) vs LZ4 block format."""
+
+from __future__ import annotations
+
+from benchmarks.common import emit
+from benchmarks.lz4_format import lz4_ratio
+from repro.core import lzss
+from repro.data import datasets
+
+# Paper Fig. 8 reference ratios (gpulz default / culzss / nvcomp-lz4)
+PAPER = {
+    "hurr-quant": (4.9, 4.4, 3.2), "hacc-quant": (2.0, 1.9, 1.9),
+    "nyx-quant": (7.2, 6.2, 4.0), "tpch-int32": (1.3, 1.4, 1.2),
+    "tpch-string": (2.4, 2.6, 2.3), "rtm-float32": (2.9, 2.7, 2.5),
+}
+
+
+def best_ratio(data):
+    best = 0.0
+    for c in (2048, 4096):
+        for w in (32, 64, 128, 255):
+            for s in (1, 2, 4):
+                cfg = lzss.LZSSConfig(symbol_size=s, window=w, chunk_symbols=c)
+                best = max(best, lzss.compress(data, cfg).ratio)
+    return best
+
+
+def run(nbytes: int = 1 << 21):
+    print("# fig8: name,us_per_call,ratio[|paper]")
+    for ds in datasets.DATASETS:
+        data = datasets.load(ds, nbytes)
+        gpulz = lzss.compress(data, lzss.DEFAULT_CONFIG).ratio
+        culzss = lzss.compress(
+            data,
+            lzss.LZSSConfig(symbol_size=1, window=128, chunk_symbols=2048),
+        ).ratio
+        lz4 = lz4_ratio(data, max_bytes=1 << 20)
+        best = best_ratio(data)
+        p = PAPER.get(ds, ("?",) * 3)
+        emit(f"fig8/{ds}/gpulz", 0.0, f"{gpulz:.2f}|paper={p[0]}")
+        emit(f"fig8/{ds}/gpulz-best", 0.0, f"{best:.2f}")
+        emit(f"fig8/{ds}/culzss-style", 0.0, f"{culzss:.2f}|paper={p[1]}")
+        emit(f"fig8/{ds}/lz4-format", 0.0, f"{lz4:.2f}|paper={p[2]}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,59 @@
+"""Byte-level canonical Huffman size estimator (host, numpy).
+
+Used by the Table-3 use case: original cuSZ = Huffman(quant codes);
+improved cuSZ = Huffman(GPULZ(quant codes)).  Size-exact (codebook +
+bitstream), encoder-only — the use case reports ratios and throughput of the
+GPULZ stage; Huffman decode is out of scope for this paper.
+"""
+
+from __future__ import annotations
+
+import heapq
+
+import numpy as np
+
+
+def huffman_code_lengths(counts: np.ndarray) -> np.ndarray:
+    """Code length per symbol (0 for absent symbols)."""
+    heap = [(int(c), i) for i, c in enumerate(counts) if c > 0]
+    if len(heap) == 1:
+        lengths = np.zeros(counts.size, np.int64)
+        lengths[heap[0][1]] = 1
+        return lengths
+    heapq.heapify(heap)
+    # internal nodes: (count, id); track merges to recover depths
+    parent = {}
+    next_id = counts.size
+    heap = [(c, i) for c, i in heap]
+    heapq.heapify(heap)
+    while len(heap) > 1:
+        c1, n1 = heapq.heappop(heap)
+        c2, n2 = heapq.heappop(heap)
+        parent[n1] = next_id
+        parent[n2] = next_id
+        heapq.heappush(heap, (c1 + c2, next_id))
+        next_id += 1
+    lengths = np.zeros(counts.size, np.int64)
+    for sym in range(counts.size):
+        if counts[sym] == 0:
+            continue
+        d, node = 0, sym
+        while node in parent:
+            node = parent[node]
+            d += 1
+        lengths[sym] = d
+    return lengths
+
+
+def huffman_compressed_bytes(data: np.ndarray) -> int:
+    """Exact canonical-Huffman payload size + 256-entry length table."""
+    d = np.ascontiguousarray(data).view(np.uint8).reshape(-1)
+    counts = np.bincount(d, minlength=256)
+    lengths = huffman_code_lengths(counts)
+    bits = int((counts * lengths).sum())
+    return (bits + 7) // 8 + 256  # payload + codebook lengths
+
+
+def huffman_ratio(data: np.ndarray) -> float:
+    d = np.ascontiguousarray(data).view(np.uint8).reshape(-1)
+    return d.size / max(1, huffman_compressed_bytes(d))

@@ -1,0 +1,42 @@
+"""Paper Table 1: compression ratio vs (chunk size C, window W, symbol S)
+on the six dataset surrogates.  Paper's own measurements are printed in the
+last column for calibration (surrogates match character, not bytes)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+from repro.core import lzss
+from repro.data import datasets
+
+# Paper Table 1 reference values at C=2048 (ratio), keyed (dataset, W, S)
+PAPER_C2048 = {
+    ("hurr-quant", 32, 1): 3.14, ("hurr-quant", 32, 2): 3.77,
+    ("hurr-quant", 128, 2): 4.91, ("hurr-quant", 255, 2): 5.32,
+    ("hacc-quant", 128, 2): 1.97, ("nyx-quant", 128, 2): 7.19,
+    ("tpch-int32", 128, 1): 1.43, ("tpch-int32", 128, 2): 1.34,
+    ("tpch-string", 128, 1): 2.57, ("rtm-float32", 128, 4): 2.94,
+}
+
+
+def run(nbytes: int = 1 << 21, chunks=(2048, 4096), windows=(32, 64, 128, 255),
+        symbols=(1, 2, 4)):
+    print("# table1: name,us_per_call,ratio[|paper]")
+    for ds in datasets.DATASETS:
+        data = datasets.load(ds, nbytes)
+        for c in chunks:
+            for w in windows:
+                for s in symbols:
+                    cfg = lzss.LZSSConfig(symbol_size=s, window=w,
+                                          chunk_symbols=c)
+                    t = time_fn(lambda: lzss.compress(data, cfg), iters=1)
+                    r = lzss.compress(data, cfg).ratio
+                    paper = PAPER_C2048.get((ds, w, s))
+                    tag = f"{r:.2f}" + (f"|paper={paper}" if paper and c == 2048
+                                        else "")
+                    emit(f"table1/{ds}/C{c}/W{w}/S{s}", t, tag)
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,37 @@
+"""Paper Table 2: compression throughput vs (C, W, S).
+
+This container measures the XLA-CPU pipeline (1 core) — the shape of the
+trends (S up => faster, W up => slower, C up => slower) is the reproduction
+target; absolute GB/s on TPU comes from the §Roofline analysis of the Pallas
+kernel, not from this host."""
+
+from __future__ import annotations
+
+from benchmarks.common import emit, throughput_gbs, time_fn
+from repro.core import lzss
+from repro.data import datasets
+
+
+def run(nbytes: int = 1 << 21, dataset: str = "nyx-quant"):
+    print("# table2: name,us_per_call,GB/s")
+    data = datasets.load(dataset, nbytes)
+    for c in (2048, 4096):
+        for w in (32, 64, 128, 255):
+            for s in (1, 2, 4):
+                cfg = lzss.LZSSConfig(symbol_size=s, window=w, chunk_symbols=c)
+                t = time_fn(lambda: lzss.compress(data, cfg), warmup=1,
+                            iters=2)
+                emit(
+                    f"table2/{dataset}/C{c}/W{w}/S{s}", t,
+                    f"{throughput_gbs(nbytes, t):.4f}",
+                )
+    # decompression throughput (paper §4.4 tail)
+    cfg = lzss.DEFAULT_CONFIG
+    blob = lzss.compress(data, cfg).data
+    t = time_fn(lambda: lzss.decompress(blob), warmup=1, iters=2)
+    emit(f"table2/{dataset}/decompress", t,
+         f"{throughput_gbs(nbytes, t):.4f}")
+
+
+if __name__ == "__main__":
+    run()

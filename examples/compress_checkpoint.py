@@ -1,0 +1,43 @@
+"""Checkpoint compression end-to-end: train state -> GPULZ shards -> restore
+onto a (different) mesh — the elastic-restart path.
+
+    PYTHONPATH=src python examples/compress_checkpoint.py
+"""
+
+import tempfile
+
+import jax
+import numpy as np
+
+from repro import configs
+from repro.checkpoint.manager import CheckpointManager
+from repro.configs.base import TrainConfig
+from repro.launch import steps
+
+
+def main():
+    cfg = configs.reduced_config(configs.get_config("llama3.2-1b"))
+    tc = TrainConfig()
+    state = steps.init_train_state(cfg, tc, 0)
+    # make the params non-trivial so ratios are honest
+    state["params"] = jax.tree.map(
+        lambda p: p if p.dtype == np.int32 else p * 1.0, state["params"]
+    )
+
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d, compress=True)
+        mgr.save(state, 100)
+        st = mgr.stats(100)
+        print(f"checkpoint: {st['orig_bytes']/1e6:.2f} MB -> "
+              f"{st['stored_bytes']/1e6:.2f} MB (ratio {st['ratio']:.2f})")
+        # zero-initialized Adam moments dominate the win; bf16 params less so
+        restored, step = mgr.restore_latest(jax.eval_shape(lambda: state))
+        ok = all(
+            np.array_equal(np.asarray(a), np.asarray(b))
+            for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored))
+        )
+        print(f"restored step {step}, bit-exact: {ok}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+# The paper's primary contribution: GPULZ — multi-byte LZSS compression
+# restructured for accelerator execution (matching / local prefix sum /
+# encoding fused; global prefix sum; deflate), plus the cuSZ-style
+# error-bounded quantizer it pairs with in the paper's use case.
+from repro.core.lzss import (
+    DEFAULT_CONFIG,
+    LZSSConfig,
+    WINDOW_LEVELS,
+    CompressResult,
+    compress,
+    compress_chunks,
+    compression_ratio,
+    decompress,
+    decompress_chunks,
+    pack_symbols,
+    unpack_symbols,
+)
+from repro.core.match import find_matches
+from repro.core.params import ParamSelector, select_params
+from repro.core.quant import dequantize, quantize, relative_error_bound
+
+__all__ = [
+    "DEFAULT_CONFIG",
+    "LZSSConfig",
+    "WINDOW_LEVELS",
+    "CompressResult",
+    "compress",
+    "compress_chunks",
+    "compression_ratio",
+    "decompress",
+    "decompress_chunks",
+    "pack_symbols",
+    "unpack_symbols",
+    "find_matches",
+    "ParamSelector",
+    "select_params",
+    "quantize",
+    "dequantize",
+    "relative_error_bound",
+]

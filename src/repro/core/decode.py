@@ -1,0 +1,132 @@
+"""LZSS decompression.
+
+Two decoders over per-chunk aligned sections:
+
+  * ``decode_scan``     — sequential token walk per chunk (lax.scan, vmapped
+    over chunks).  This is the paper's decompression parallelization (chunk
+    level only); kept as the oracle.
+  * ``decode_parallel`` — beyond-paper fully parallel decoder.  Because match
+    length <= offset (match.py), a copied symbol's source lies strictly before
+    the copy's own token, so back-references form a forest rooted at literals.
+    Token read/write offsets come from two prefix sums (over [2|S] byte sizes
+    and over output lengths), and chained copies resolve with ceil(log2 C)
+    rounds of pointer doubling.  No sequential dependency remains.
+
+Inputs are the (nc, C//8) flag bytes, (nc, C*S) payload bytes and (nc,) token
+counts produced by deflate.gather_section; output is (nc, C) int32 symbols.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.match import MAX_LEN_CAP
+
+
+def _bit(flag_bytes, t):
+    """t-th flag bit per chunk; t: (nc, K) or scalar-per-chunk indices."""
+    byte = jnp.take_along_axis(flag_bytes, t // 8, axis=1)
+    return (byte >> (t % 8)) & 1
+
+
+@functools.partial(jax.jit, static_argnames=("symbol_size",))
+def decode_parallel(flag_bytes, payload, n_tokens, *, symbol_size):
+    nc, cb = flag_bytes.shape
+    c = cb * 8
+    s = symbol_size
+    rows = jnp.arange(nc)[:, None]
+    t = jnp.arange(c, dtype=jnp.int32)[None, :]
+    active = t < n_tokens[:, None]
+
+    flags = _bit(flag_bytes, jnp.broadcast_to(t, (nc, c))) * active
+    read_size = jnp.where(active, jnp.where(flags == 1, 2, s), 0)
+    rcsum = jnp.cumsum(read_size, axis=1)
+    read_off = rcsum - read_size
+
+    def pay_at(k):
+        return jnp.take_along_axis(
+            payload, jnp.clip(read_off + k, 0, payload.shape[1] - 1), axis=1
+        )
+
+    ln = jnp.where(flags == 1, pay_at(0), 1) * active
+    off = jnp.where(flags == 1, pay_at(1), 0) * active
+    lit = jnp.zeros((nc, c), jnp.int32)
+    for b in range(s):
+        lit = lit + (pay_at(b) << (8 * b))
+    lit = jnp.where(flags == 0, lit, 0)
+
+    wcsum = jnp.cumsum(ln, axis=1)
+    out_pos = wcsum - ln  # token write start (symbols)
+
+    # Per-output-symbol token id: scatter token starts, then prefix-sum fill.
+    starts = (
+        jnp.zeros((nc, c), jnp.int32)
+        .at[rows, jnp.where(active & (ln > 0), out_pos, c)]
+        .add(1, mode="drop")
+    )
+    token_id = jnp.clip(jnp.cumsum(starts, axis=1) - 1, 0, c - 1)
+
+    w = jnp.arange(c, dtype=jnp.int32)[None, :]
+    flag_w = jnp.take_along_axis(flags, token_id, axis=1)
+    off_w = jnp.take_along_axis(off, token_id, axis=1)
+    lit_w = jnp.take_along_axis(lit, token_id, axis=1)
+    src = jnp.where(flag_w == 1, jnp.clip(w - off_w, 0, c - 1), w)
+
+    for _ in range(max(1, math.ceil(math.log2(c)))):
+        src = jnp.take_along_axis(src, src, axis=1)
+
+    return jnp.take_along_axis(lit_w, src, axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("symbol_size", "max_len"))
+def decode_scan(flag_bytes, payload, n_tokens, *, symbol_size,
+                max_len=MAX_LEN_CAP):
+    """Oracle decoder: sequential token walk (scan over token slots)."""
+    nc, cb = flag_bytes.shape
+    c = cb * 8
+    s = symbol_size
+    rows = jnp.arange(nc)[:, None]
+    k = jnp.arange(max_len, dtype=jnp.int32)[None, :]
+
+    def pay_at(idx):
+        return jnp.take_along_axis(payload, jnp.clip(idx, 0, payload.shape[1] - 1), axis=1)
+
+    def body(carry, t):
+        rp, wp, out = carry
+        active = t < n_tokens
+        byte = lax.dynamic_slice_in_dim(flag_bytes, t // 8, 1, axis=1)[:, 0]
+        flag = (byte >> (t % 8)) & 1
+        is_m = (flag == 1) & active
+        is_l = (flag == 0) & active
+        ln = pay_at(rp[:, None])[:, 0]
+        off = pay_at(rp[:, None] + 1)[:, 0]
+        sym = jnp.zeros((nc,), jnp.int32)
+        for b in range(s):
+            sym = sym + (pay_at(rp[:, None] + b)[:, 0] << (8 * b))
+        # match copy (len <= off => source fully decoded, no overlap)
+        src_idx = jnp.clip(wp[:, None] - off[:, None] + k, 0, c - 1)
+        vals = jnp.take_along_axis(out, src_idx, axis=1)
+        mask = (k < ln[:, None]) & is_m[:, None]
+        dst = jnp.where(mask, wp[:, None] + k, c)
+        out = out.at[rows, dst].add(jnp.where(mask, vals, 0), mode="drop")
+        # literal write
+        dst_l = jnp.where(is_l, wp, c)
+        out = out.at[jnp.arange(nc), dst_l].add(
+            jnp.where(is_l, sym, 0), mode="drop"
+        )
+        rp = rp + jnp.where(active, jnp.where(is_m, 2, s), 0)
+        wp = wp + jnp.where(active, jnp.where(is_m, ln, 1), 0)
+        return (rp, wp, out), None
+
+    init = (
+        jnp.zeros((nc,), jnp.int32),
+        jnp.zeros((nc,), jnp.int32),
+        jnp.zeros((nc, c), jnp.int32),
+    )
+    (_, _, out), _ = lax.scan(body, init, jnp.arange(c, dtype=jnp.int32))
+    return out

@@ -1,0 +1,109 @@
+"""Flag-array packing, per-chunk payload construction, and deflating.
+
+Maps to the paper's pipeline as follows:
+  * ``pack_flags`` / ``build_chunk_payloads`` — the encode tail of Kernel I
+    (write compressed symbols at their local-prefix-sum offsets, emit the
+    per-chunk flag array);
+  * ``global_offsets`` — Kernel II (two exclusive prefix sums: one over the
+    compressed payload sizes, one over the flag-array sizes — the paper calls
+    CUB ``DeviceScan::ExclusiveSum`` twice);
+  * ``scatter_sections`` — Kernel III (deflate: drop the empty bytes by
+    scattering each chunk's compact bytes to its global offset).
+
+All shapes are static; variable-size results live in fixed worst-case buffers
+with masked ('drop'-mode) scatters, the JAX analogue of bounds-checked writes.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+
+def pack_flags(emitted, use_match):
+    """Pack one flag bit per emitted token (1 = pointer, 0 = literal).
+
+    Returns:
+      flag_bytes: (nc, C//8) int32 in [0,255] — bit t of the chunk's flag
+        stream is the t-th token's kind; trailing bits are zero.
+      flag_sizes: (nc,) int32 — ceil(n_tokens/8) bytes actually used.
+    """
+    nc, c = emitted.shape
+    cb = (c + 7) // 8
+    rank = jnp.cumsum(emitted.astype(jnp.int32), axis=1) - 1
+    byte_idx = jnp.where(emitted, rank // 8, cb)  # cb => dropped
+    bitval = (use_match.astype(jnp.int32) << (rank % 8)) * emitted
+    rows = jnp.arange(nc)[:, None]
+    flag_bytes = (
+        jnp.zeros((nc, cb), jnp.int32)
+        .at[rows, byte_idx]
+        .add(bitval, mode="drop")
+    )
+    n_tokens = jnp.sum(emitted.astype(jnp.int32), axis=1)
+    flag_sizes = (n_tokens + 7) // 8
+    return flag_bytes, flag_sizes
+
+
+def build_chunk_payloads(symbols, lengths, offsets, fields, *, symbol_size):
+    """Write each chunk's compressed bytes at their local offsets.
+
+    Returns (nc, C*S) int32 byte values; bytes beyond fields['payload_sizes']
+    are zero.  Pointers are [length, offset]; literals are the S symbol bytes
+    little-endian.
+    """
+    nc, c = symbols.shape
+    s = symbol_size
+    bufsz = c * s
+    use_match = fields["use_match"]
+    emitted = use_match | (fields["sizes"] > 0)
+    local = fields["local_off"]
+    rows = jnp.arange(nc)[:, None]
+    buf = jnp.zeros((nc, bufsz), jnp.int32)
+    for b in range(max(2, s)):
+        match_byte = jnp.where(b == 0, lengths, offsets)
+        lit_byte = (symbols >> (8 * b)) & 0xFF
+        val = jnp.where(use_match, match_byte, lit_byte)
+        width = jnp.where(use_match, 2, s)
+        valid = emitted & (b < width)
+        idx = jnp.where(valid, local + b, bufsz)  # bufsz => dropped
+        buf = buf.at[rows, idx].add(jnp.where(valid, val, 0), mode="drop")
+    return buf
+
+
+def global_offsets(payload_sizes, flag_sizes):
+    """Kernel II: exclusive prefix sums over chunk payload and flag sizes."""
+    pay_csum = jnp.cumsum(payload_sizes)
+    flag_csum = jnp.cumsum(flag_sizes)
+    pay_off = pay_csum - payload_sizes
+    flag_off = flag_csum - flag_sizes
+    return pay_off, pay_csum[-1], flag_off, flag_csum[-1]
+
+
+def scatter_section(out, base, chunk_bytes, chunk_sizes, chunk_offsets):
+    """Kernel III: scatter per-chunk compact bytes to base + global offsets.
+
+    out:         (cap,) int32 flat output buffer
+    base:        scalar int32 — section start within ``out``
+    chunk_bytes: (nc, B) int32 — per-chunk buffers (valid prefix only)
+    """
+    nc, b = chunk_bytes.shape
+    j = jnp.arange(b, dtype=jnp.int32)[None, :]
+    valid = j < chunk_sizes[:, None]
+    dest = jnp.where(valid, base + chunk_offsets[:, None] + j, out.shape[0])
+    return out.at[dest.reshape(-1)].add(
+        jnp.where(valid, chunk_bytes, 0).reshape(-1), mode="drop"
+    )
+
+
+def gather_section(flat, base, chunk_sizes, chunk_offsets, width):
+    """Inverse of scatter_section: re-chunk a compact section into (nc, width).
+
+    Bytes beyond chunk_sizes[c] are zeroed.  Used by the decoder to rebuild
+    per-chunk aligned flag / payload arrays from the blob.
+    """
+    nc = chunk_sizes.shape[0]
+    j = jnp.arange(width, dtype=jnp.int32)[None, :]
+    valid = j < chunk_sizes[:, None]
+    src = jnp.clip(base + chunk_offsets[:, None] + j, 0, flat.shape[0] - 1)
+    vals = flat[src.reshape(-1)].reshape(nc, width)
+    return jnp.where(valid, vals, 0)

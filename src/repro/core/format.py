@@ -1,0 +1,155 @@
+"""GPULZ container format.
+
+Layout (little-endian):
+
+  offset  size        field
+  ------  ----        -----
+  0       4           magic  b"GPLZ"
+  4       1           version (1)
+  5       1           symbol_size S (1, 2 or 4)
+  6       2           window W (u16, <= 255)
+  8       4           chunk_symbols C (u32)
+  12      4           n_chunks (u32)
+  16      8           orig_bytes (u64)
+  24      8           payload_bytes total (u64)
+  32      8           flag_bytes total (u64)
+  40      8           reserved
+  48      4*nc        section A: per-chunk token counts (u32)
+  +       4*nc        section B: per-chunk payload sizes (u32)
+  +       flag_bytes  section C: per-chunk flag arrays, concatenated
+  +       payload     section D: per-chunk payloads, concatenated
+
+The flag array + two per-chunk size tables mirror the paper's format (flag
+array per §2.2; the two tables are what Kernel II prefix-sums).  Sections C/D
+are compact (deflated); A/B let the decoder rebuild every chunk's offsets with
+two exclusive prefix sums — decompression needs no sequential parse.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+MAGIC = (0x47, 0x50, 0x4C, 0x5A)  # "GPLZ"
+VERSION = 1
+HEADER_BYTES = 48
+
+
+@dataclasses.dataclass(frozen=True)
+class Header:
+    symbol_size: int
+    window: int
+    chunk_symbols: int
+    n_chunks: int
+    orig_bytes: int
+    payload_bytes: int
+    flag_bytes: int
+
+    @property
+    def sec_a(self) -> int:
+        return HEADER_BYTES
+
+    @property
+    def sec_b(self) -> int:
+        return self.sec_a + 4 * self.n_chunks
+
+    @property
+    def sec_flags(self) -> int:
+        return self.sec_b + 4 * self.n_chunks
+
+    @property
+    def sec_payload(self) -> int:
+        return self.sec_flags + self.flag_bytes
+
+    @property
+    def total_bytes(self) -> int:
+        return self.sec_payload + self.payload_bytes
+
+
+def max_compressed_bytes(n_bytes: int, symbol_size: int, chunk_symbols: int) -> int:
+    """Worst-case container size (all-literal chunks)."""
+    nsym = -(-n_bytes // symbol_size)
+    nc = max(1, -(-nsym // chunk_symbols))
+    cb = (chunk_symbols + 7) // 8
+    return HEADER_BYTES + 8 * nc + nc * cb + nc * chunk_symbols * symbol_size
+
+
+def _le_bytes(value, n):
+    """Decompose a (possibly traced) scalar into n little-endian bytes.
+
+    Static python ints use exact arithmetic; traced values are int32
+    in-graph (x64 disabled) — container sizes are bounded by per-call block
+    sizes (<2 GiB; larger tensors are slab-split by callers), so 4 live
+    bytes suffice; the u64 header fields exist for format stability.
+    """
+    if isinstance(value, int):
+        return [
+            jnp.asarray((value >> (8 * k)) & 0xFF, jnp.int32)
+            for k in range(n)
+        ]
+    value = jnp.asarray(value, jnp.int32)
+    out = [(value >> (8 * k)) & 0xFF for k in range(min(n, 4))]
+    out += [jnp.zeros((), jnp.int32)] * (n - len(out))
+    return out
+
+
+def write_header_and_tables(out, *, symbol_size, window, chunk_symbols,
+                            n_chunks, orig_bytes, payload_total, flag_total,
+                            n_tokens, payload_sizes):
+    """Fill header + sections A/B of the flat int32 byte buffer ``out``."""
+    static = list(MAGIC) + [VERSION, symbol_size, window & 0xFF, window >> 8]
+    static += [
+        (chunk_symbols >> (8 * k)) & 0xFF for k in range(4)
+    ] + [(n_chunks >> (8 * k)) & 0xFF for k in range(4)]
+    out = out.at[0:16].set(jnp.array(static, jnp.int32))
+    dyn = (
+        _le_bytes(orig_bytes, 8)
+        + _le_bytes(payload_total, 8)
+        + _le_bytes(flag_total, 8)
+        + [jnp.zeros((), jnp.int32)] * 8
+    )
+    out = out.at[16:48].set(jnp.stack(dyn).astype(jnp.int32))
+    # sections A (token counts) and B (payload sizes), u32 little-endian
+    sec_a = HEADER_BYTES
+    sec_b = sec_a + 4 * n_chunks
+    for k in range(4):
+        out = out.at[sec_a + k : sec_a + 4 * n_chunks : 4].set(
+            (n_tokens >> (8 * k)) & 0xFF
+        )
+        out = out.at[sec_b + k : sec_b + 4 * n_chunks : 4].set(
+            (payload_sizes >> (8 * k)) & 0xFF
+        )
+    return out
+
+
+def parse_header(blob: np.ndarray) -> Header:
+    """Host-side header parse (numpy uint8 array)."""
+    blob = np.asarray(blob, np.uint8)
+    if tuple(int(b) for b in blob[:4]) != MAGIC:
+        raise ValueError("bad magic: not a GPULZ container")
+    if int(blob[4]) != VERSION:
+        raise ValueError(f"unsupported version {int(blob[4])}")
+
+    def u(lo, n):
+        return int.from_bytes(bytes(blob[lo : lo + n]), "little")
+
+    return Header(
+        symbol_size=int(blob[5]),
+        window=u(6, 2),
+        chunk_symbols=u(8, 4),
+        n_chunks=u(12, 4),
+        orig_bytes=u(16, 8),
+        payload_bytes=u(24, 8),
+        flag_bytes=u(32, 8),
+    )
+
+
+def parse_tables(blob: np.ndarray, header: Header):
+    """Host-side sections A/B parse -> (n_tokens, payload_sizes) uint32."""
+    blob = np.asarray(blob, np.uint8)
+    nc = header.n_chunks
+    a = blob[header.sec_a : header.sec_a + 4 * nc].view(np.uint32).copy()
+    b = blob[header.sec_b : header.sec_b + 4 * nc].view(np.uint32).copy()
+    return a.astype(np.int32), b.astype(np.int32)

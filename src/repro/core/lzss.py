@@ -1,0 +1,216 @@
+"""GPULZ top-level API: the paper's five-step pipeline on TPU/XLA.
+
+    matching -> local prefix sum -> encoding -> global prefix sum -> deflating
+    `------------- Kernel I -------------'    `-- Kernel II --'   `Kernel III'
+
+``compress_chunks`` is the fully jittable core (fixed shapes, usable in-graph
+for gradient/KV compression); ``compress``/``decompress`` are host-facing
+wrappers handling padding, headers and dynamic sizes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import decode as decode_mod
+from repro.core import deflate, encode, format as fmt, match
+
+
+@dataclasses.dataclass(frozen=True)
+class LZSSConfig:
+    """Paper parameters: S (symbol bytes), W (window), C (chunk symbols)."""
+
+    symbol_size: int = 2          # S in {1, 2, 4}
+    window: int = 128             # W in [1, 255]; levels 1-4 = 32/64/128/255
+    chunk_symbols: int = 2048     # C; VMEM-resident chunk
+    selector: Literal["scan", "doubling"] = "doubling"
+    matcher: Literal["xla", "pallas"] = "xla"
+    decoder: Literal["parallel", "scan"] = "parallel"
+
+    def __post_init__(self):
+        if self.symbol_size not in (1, 2, 4):
+            raise ValueError(f"symbol_size must be 1, 2 or 4: {self.symbol_size}")
+        if not 1 <= self.window <= 255:
+            raise ValueError(f"window must be in [1, 255]: {self.window}")
+        if self.chunk_symbols % 8:
+            raise ValueError("chunk_symbols must be a multiple of 8")
+
+    @property
+    def min_match(self) -> int:
+        return encode.min_match_length(self.symbol_size)
+
+
+DEFAULT_CONFIG = LZSSConfig()  # paper default: C=2048, S=2, W=128
+
+# window "levels" exposed to users (paper §3.2.3: level 1-4 trade ratio/speed)
+WINDOW_LEVELS = {1: 32, 2: 64, 3: 128, 4: 255}
+
+
+def pack_symbols(data: jnp.ndarray, symbol_size: int) -> jnp.ndarray:
+    """(n_bytes,) uint8 -> (n_sym,) int32 little-endian symbols (n_bytes % S == 0)."""
+    d = data.reshape(-1, symbol_size).astype(jnp.int32)
+    sym = d[:, 0]
+    for b in range(1, symbol_size):
+        sym = sym | (d[:, b] << (8 * b))
+    return sym
+
+
+def unpack_symbols(symbols: jnp.ndarray, symbol_size: int) -> jnp.ndarray:
+    """(n_sym,) int32 -> (n_sym * S,) uint8 little-endian."""
+    cols = [((symbols >> (8 * b)) & 0xFF) for b in range(symbol_size)]
+    return jnp.stack(cols, axis=-1).reshape(-1).astype(jnp.uint8)
+
+
+def _find_matches(symbols, cfg: LZSSConfig):
+    if cfg.matcher == "pallas":
+        from repro.kernels import ops  # lazy: kernels are optional at import
+
+        return ops.lz_match(symbols, window=cfg.window)
+    return match.find_matches(symbols, window=cfg.window)
+
+
+def _select(lengths, cfg: LZSSConfig):
+    fn = (
+        encode.select_tokens_doubling
+        if cfg.selector == "doubling"
+        else encode.select_tokens_scan
+    )
+    return fn(lengths, min_match=cfg.min_match)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def compress_chunks(symbols: jnp.ndarray, cfg: LZSSConfig):
+    """Jittable core: (nc, C) int32 symbols -> (buffer u8[cap], total_bytes).
+
+    The buffer holds a complete container (header + tables + flags + payload);
+    bytes past ``total_bytes`` are zero.
+    """
+    nc, c = symbols.shape
+    s = cfg.symbol_size
+    lengths, offsets = _find_matches(symbols, cfg)
+    emitted = _select(lengths, cfg)
+    fields = encode.token_fields(
+        lengths, emitted, min_match=cfg.min_match, symbol_size=s
+    )
+    flag_bytes, flag_sizes = deflate.pack_flags(emitted, fields["use_match"])
+    payload = deflate.build_chunk_payloads(
+        symbols, lengths, offsets, fields, symbol_size=s
+    )
+    pay_off, pay_total, flag_off, flag_total = deflate.global_offsets(
+        fields["payload_sizes"], flag_sizes
+    )
+    cap = fmt.max_compressed_bytes(nc * c * s, s, c)
+    out = jnp.zeros((cap,), jnp.int32)
+    out = fmt.write_header_and_tables(
+        out,
+        symbol_size=s,
+        window=cfg.window,
+        chunk_symbols=c,
+        n_chunks=nc,
+        orig_bytes=nc * c * s,
+        payload_total=pay_total,
+        flag_total=flag_total,
+        n_tokens=fields["n_tokens"],
+        payload_sizes=fields["payload_sizes"],
+    )
+    sec_flags = fmt.HEADER_BYTES + 8 * nc
+    out = deflate.scatter_section(out, sec_flags, flag_bytes, flag_sizes, flag_off)
+    out = deflate.scatter_section(
+        out, sec_flags + flag_total, payload, fields["payload_sizes"], pay_off
+    )
+    total = sec_flags + flag_total + pay_total
+    return out.astype(jnp.uint8), total
+
+
+@functools.partial(
+    jax.jit, static_argnames=("symbol_size", "chunk_symbols", "n_chunks", "decoder")
+)
+def decompress_chunks(
+    blob, n_tokens, payload_sizes, *, symbol_size, chunk_symbols, n_chunks, decoder
+):
+    """Jittable core: container bytes -> (nc, C) int32 symbols."""
+    c, s, nc = chunk_symbols, symbol_size, n_chunks
+    blob = blob.astype(jnp.int32)
+    flag_sizes = (n_tokens + 7) // 8
+    fcsum = jnp.cumsum(flag_sizes)
+    pcsum = jnp.cumsum(payload_sizes)
+    flag_off = fcsum - flag_sizes
+    pay_off = pcsum - payload_sizes
+    sec_flags = fmt.HEADER_BYTES + 8 * nc
+    flag_bytes = deflate.gather_section(
+        blob, sec_flags, flag_sizes, flag_off, (c + 7) // 8
+    )
+    payload = deflate.gather_section(
+        blob, sec_flags + fcsum[-1], payload_sizes, pay_off, c * s
+    )
+    fn = (
+        decode_mod.decode_parallel
+        if decoder == "parallel"
+        else decode_mod.decode_scan
+    )
+    return fn(flag_bytes, payload, n_tokens, symbol_size=s)
+
+
+# ---------------------------------------------------------------- host API
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressResult:
+    data: np.ndarray        # uint8, exactly total_bytes long
+    orig_bytes: int
+    total_bytes: int
+
+    @property
+    def ratio(self) -> float:
+        return self.orig_bytes / max(1, self.total_bytes)
+
+
+def compress(data, config: LZSSConfig = DEFAULT_CONFIG) -> CompressResult:
+    """Compress any array/bytes. Pads to whole chunks; header records truth."""
+    raw = np.ascontiguousarray(data).view(np.uint8).reshape(-1)
+    n = raw.size
+    s, c = config.symbol_size, config.chunk_symbols
+    nsym = -(-max(n, 1) // s)
+    nc = -(-nsym // c)
+    padded = np.zeros(nc * c * s, np.uint8)
+    padded[:n] = raw
+    symbols = pack_symbols(jnp.asarray(padded), s).reshape(nc, c)
+    buf, total = compress_chunks(symbols, config)
+    buf = np.array(buf)  # writable host copy
+    total = int(total)
+    # patch true orig_bytes into the header (host-side, cheap)
+    buf[16:24] = np.frombuffer(int(n).to_bytes(8, "little"), np.uint8)
+    return CompressResult(data=buf[:total], orig_bytes=n, total_bytes=total)
+
+
+def decompress(blob, decoder: str = "parallel") -> np.ndarray:
+    """Decompress a container -> uint8 array of the original bytes."""
+    blob = np.asarray(blob, np.uint8)
+    h = fmt.parse_header(blob)
+    n_tokens, payload_sizes = fmt.parse_tables(blob, h)
+    cap = fmt.max_compressed_bytes(
+        h.n_chunks * h.chunk_symbols * h.symbol_size, h.symbol_size, h.chunk_symbols
+    )
+    full = np.zeros(cap, np.uint8)
+    full[: blob.size] = blob
+    symbols = decompress_chunks(
+        jnp.asarray(full),
+        jnp.asarray(n_tokens),
+        jnp.asarray(payload_sizes),
+        symbol_size=h.symbol_size,
+        chunk_symbols=h.chunk_symbols,
+        n_chunks=h.n_chunks,
+        decoder=decoder,
+    )
+    out = np.asarray(unpack_symbols(symbols.reshape(-1), h.symbol_size))
+    return out[: h.orig_bytes]
+
+
+def compression_ratio(data, config: LZSSConfig = DEFAULT_CONFIG) -> float:
+    return compress(data, config).ratio

@@ -1,0 +1,143 @@
+"""Multi-byte LZSS matching (paper §3.2.3, §3.3.2) — TPU-native formulation.
+
+The paper assigns one CUDA thread per coding position; each thread walks the
+sliding window with a bounded, divergence-free loop.  On TPU there are no
+independent threads, so we transpose the parallelism: positions live on vector
+lanes and we loop over window offsets ``d``.  For a fixed ``d`` the candidate
+match length at position ``i`` is the run length of ``eq_d[i] = x[i] == x[i-d]``
+starting at ``i``.  We compute that run length with a *capped log-doubling*
+recurrence instead of the paper's sequential pointer walk:
+
+    r_0[i]   = eq[i]                      (= min(run, 1))
+    r_{k+1}[i] = r_k[i] + (r_k[i] == 2^k) * r_k[i + 2^k]   (= min(run, 2^{k+1}))
+
+which preserves the paper's *stable complexity* property (their reason for
+redesigning the matching loop: warp divergence on GPU == serialization on TPU).
+
+Semantics (paper-faithful):
+  * matches never cross chunk boundaries (the chunk is the parallel unit);
+  * match source starts in the window  [i - min(i, W), i - 1];
+  * match length is capped at  min(offset, max_len, chunk remainder)  — the
+    "length never exceeds offset" rule from §3.3.2, which also guarantees
+    copies never self-overlap (enables the parallel decoder in decode.py);
+  * ties between equal-length candidates resolve to the *largest* offset,
+    matching the paper's window walk (far-to-near, strict improvement only).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+MAX_LEN_CAP = 255  # lengths are encoded in one byte
+
+
+def _num_doubling_levels(window: int, max_len: int = MAX_LEN_CAP) -> int:
+    """Levels K such that 2^K >= achievable length cap min(window, max_len)."""
+    cap = min(window, max_len)
+    k = 0
+    while (1 << k) < cap:
+        k += 1
+    return k
+
+
+def _shift_left_static(x: jnp.ndarray, k: int) -> jnp.ndarray:
+    """out[..., i] = x[..., i + k], zero fill (no wrap across chunk ends)."""
+    if k == 0:
+        return x
+    pad = [(0, 0)] * (x.ndim - 1) + [(0, k)]
+    return jnp.pad(x, pad)[..., k:]
+
+
+def capped_run_lengths(eq: jnp.ndarray, levels: int) -> jnp.ndarray:
+    """min(run-length starting at i, 2^levels) for a 0/1 int array ``eq``."""
+    r = eq.astype(jnp.int32)
+    for k in range(levels):
+        stride = 1 << k
+        r = r + jnp.where(r == stride, _shift_left_static(r, stride), 0)
+    return r
+
+
+@functools.partial(jax.jit, static_argnames=("window", "max_len"))
+def find_matches(
+    symbols: jnp.ndarray, *, window: int, max_len: int = MAX_LEN_CAP
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Find the longest match for every position of every chunk.
+
+    Args:
+      symbols: (num_chunks, C) int32 symbol values (S bytes packed per symbol).
+      window:  sliding-window size W in symbols (1..255).
+      max_len: maximum match length in symbols (<= 255; one-byte length field).
+
+    Returns:
+      lengths: (num_chunks, C) int32 — best match length (0 = no match).
+      offsets: (num_chunks, C) int32 — its offset d in [1, W] (0 = no match).
+    """
+    if symbols.ndim != 2:
+        raise ValueError(f"symbols must be (num_chunks, C), got {symbols.shape}")
+    if not (1 <= window <= 255):
+        raise ValueError(f"window must be in [1, 255], got {window}")
+    nc, c = symbols.shape
+    idx = lax.broadcasted_iota(jnp.int32, (nc, c), 1)
+    # Left-pad with a sentinel so x[i-d] is gathered with a static-size
+    # dynamic_slice; the sentinel never equals a real symbol *and* positions
+    # i < d are additionally masked via the iota test below.
+    padded = jnp.concatenate(
+        [jnp.zeros((nc, window), jnp.int32), symbols.astype(jnp.int32)], axis=1
+    )
+    pack = window + 1  # key = len * pack + d  (ties -> larger offset wins)
+
+    def body_for(levels):
+        def body(d, best):
+            shifted = lax.dynamic_slice_in_dim(padded, window - d, c, axis=1)
+            eq = (symbols == shifted) & (idx >= d)
+            r = capped_run_lengths(eq.astype(jnp.int32), levels)
+            cand = jnp.minimum(r, jnp.minimum(d, max_len))
+            key = cand * pack + d
+            return jnp.maximum(best, key)
+
+        return body
+
+    # Bucketed offsets: candidates are capped at min(d, max_len), so offsets
+    # in (2^{k-1}, 2^k] only need k doubling levels — ~15% fewer vector ops
+    # at W=128 than running every offset at ceil(log2 W) levels (§Perf).
+    best = jnp.zeros((nc, c), jnp.int32)
+    lo = 1
+    k = 0
+    max_levels = _num_doubling_levels(window, max_len)
+    while lo <= window:
+        k = min(k, max_levels)
+        hi = min(window, (1 << k) if k else 1)
+        best = lax.fori_loop(lo, hi + 1, body_for(k), best)
+        lo = hi + 1
+        k += 1
+    lengths = best // pack
+    offsets = jnp.where(lengths > 0, best % pack, 0)
+    return lengths, offsets
+
+
+def find_matches_reference(symbols, *, window: int, max_len: int = MAX_LEN_CAP):
+    """Brute-force O(C^2 W) oracle (numpy, host) for tests."""
+    import numpy as np
+
+    symbols = np.asarray(symbols)
+    nc, c = symbols.shape
+    lengths = np.zeros((nc, c), np.int32)
+    offsets = np.zeros((nc, c), np.int32)
+    for n in range(nc):
+        for i in range(c):
+            best_len, best_off = 0, 0
+            for d in range(1, min(i, window) + 1):
+                cap = min(d, max_len, c - i)
+                ln = 0
+                while ln < cap and symbols[n, i + ln] == symbols[n, i - d + ln]:
+                    ln += 1
+                # strict improvement, scanning far-to-near => largest-offset tie-break
+                if ln > best_len or (ln == best_len and ln > 0 and d > best_off):
+                    best_len, best_off = ln, d
+            lengths[n, i] = best_len
+            offsets[n, i] = best_off
+    return lengths, offsets

@@ -1,0 +1,229 @@
+"""Pallas TPU kernel for GPULZ Kernel I (match + select + local prefix sum).
+
+TPU mapping of the paper's fused kernel (§3.3.2):
+
+  CUDA thread block + shared memory  ->  Pallas grid cell + VMEM block
+  one thread per coding position     ->  positions on vector lanes
+  window walk per thread             ->  fori over window offsets d = 1..W,
+                                         capped log-doubling run lengths
+  chunk per thread block             ->  ``chunks_per_block`` chunks stacked on
+                                         sublanes (fills the 8x128 VREG tile)
+  one encode thread per block        ->  in-kernel selection walk over lanes
+                                         (dynamic column load/store)
+  shared-mem local prefix sum        ->  in-VMEM log-doubling prefix sum
+
+Everything between the symbol load and the (len/off/emitted/local-offset)
+stores stays in VMEM — the equality rows and run-length intermediates never
+touch HBM.  That is precisely the paper's two-pass-prefix-sum + kernel-fusion
+insight (their Fig. 4 (c) vs (d)); the unfused XLA pipeline in core/ is the
+workflow-(c) baseline we compare against in EXPERIMENTS.md.
+
+Kernels are validated in interpret mode against kernels/ref.py (pure jnp).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+MAX_LEN_CAP = 255
+
+
+def _levels(window: int, max_len: int) -> int:
+    cap = min(window, max_len)
+    k = 0
+    while (1 << k) < cap:
+        k += 1
+    return k
+
+
+def _shift_left_zero(x, stride, idx, c):
+    """out[..., i] = x[..., i + stride] with zero fill (roll + mask)."""
+    return jnp.where(idx < c - stride, jnp.roll(x, -stride, axis=-1), 0)
+
+
+def _shift_right_zero(x, stride, idx):
+    return jnp.where(idx >= stride, jnp.roll(x, stride, axis=-1), 0)
+
+
+def _match_values(x, *, window, max_len):
+    """(G, C) symbols -> (lengths, offsets) values; runs entirely in VMEM.
+
+    The offset loop is bucketed by ceil(log2 d): candidates are capped at
+    min(d, max_len), so offsets in (2^{k-1}, 2^k] only need k doubling
+    levels (~15% fewer VPU ops at W=128; see EXPERIMENTS.md §Perf)."""
+    g, c = x.shape
+    max_levels = _levels(window, max_len)
+    idx = lax.broadcasted_iota(jnp.int32, (g, c), 1)
+    pack = window + 1
+
+    def body_for(levels):
+        def body(d, best):
+            shifted = jnp.roll(x, d, axis=-1)  # wrapped lanes masked below
+            eq = ((x == shifted) & (idx >= d)).astype(jnp.int32)
+            r = eq
+            for k in range(levels):
+                stride = 1 << k
+                r = r + jnp.where(
+                    r == stride, _shift_left_zero(r, stride, idx, c), 0
+                )
+            cand = jnp.minimum(r, jnp.minimum(d, max_len))
+            return jnp.maximum(best, cand * pack + d)
+
+        return body
+
+    best = jnp.zeros((g, c), jnp.int32)
+    lo, k = 1, 0
+    while lo <= window:
+        k = min(k, max_levels)
+        hi = min(window, 1 << k) if k else min(window, 1)
+        best = lax.fori_loop(lo, hi + 1, body_for(k), best)
+        lo = hi + 1
+        k += 1
+    lengths = best // pack
+    offsets = jnp.where(lengths > 0, best % pack, 0)
+    return lengths, offsets
+
+
+def _match_kernel(x_ref, len_ref, off_ref, *, window, max_len):
+    lengths, offsets = _match_values(x_ref[...], window=window, max_len=max_len)
+    len_ref[...] = lengths
+    off_ref[...] = offsets
+
+
+def _fused_kernel(
+    x_ref, len_ref, off_ref, emit_ref, lo_ref, paysz_ref, ntok_ref,
+    *, window, max_len, min_match, symbol_size,
+):
+    g, c = x_ref.shape
+    lengths, offsets = _match_values(x_ref[...], window=window, max_len=max_len)
+    len_ref[...] = lengths
+    off_ref[...] = offsets
+
+    # --- encode walk (paper: one thread per block; here: lanes via dynamic
+    # column access, all `g` chunks in lockstep on sublanes) ----------------
+    def body(i, next_pos):
+        len_i = pl.load(len_ref, (slice(None), pl.dslice(i, 1)))
+        emit = next_pos == i
+        step = jnp.where(len_i >= min_match, len_i, 1)
+        pl.store(
+            emit_ref, (slice(None), pl.dslice(i, 1)), emit.astype(jnp.int32)
+        )
+        return jnp.where(emit, i + step, next_pos)
+
+    lax.fori_loop(0, c, body, jnp.zeros((g, 1), jnp.int32))
+
+    # --- local prefix sum (paper's up/down-sweep == lane-shift doubling) ---
+    emitted = emit_ref[...] == 1
+    use_match = emitted & (lengths >= min_match)
+    sizes = jnp.where(
+        emitted, jnp.where(use_match, 2, symbol_size), 0
+    ).astype(jnp.int32)
+    idx = lax.broadcasted_iota(jnp.int32, (g, c), 1)
+    incl = sizes
+    ntok = emitted.astype(jnp.int32)
+    k = 1
+    while k < c:
+        incl = incl + _shift_right_zero(incl, k, idx)
+        ntok = ntok + _shift_right_zero(ntok, k, idx)
+        k *= 2
+    lo_ref[...] = incl - sizes            # exclusive local offsets
+    paysz_ref[...] = incl[:, c - 1]       # per-chunk compressed payload bytes
+    ntok_ref[...] = ntok[:, c - 1]        # per-chunk token count (flag bits)
+
+
+def _pad_chunks(symbols, gsz):
+    nc = symbols.shape[0]
+    pad = (-nc) % gsz
+    if pad:
+        symbols = jnp.concatenate(
+            [symbols, jnp.zeros((pad, symbols.shape[1]), symbols.dtype)], axis=0
+        )
+    return symbols, nc
+
+
+def _cost(nc, c, window, levels):
+    # per (position, offset): eq + levels*(cmp+sel+add) + cap/min + pack/max
+    flops = nc * c * window * (2 + 3 * levels + 5)
+    return pl.CostEstimate(
+        flops=flops, bytes_accessed=nc * c * 4 * 3, transcendentals=0
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("window", "max_len", "chunks_per_block", "interpret"),
+)
+def lz_match_pallas(
+    symbols, *, window, max_len=MAX_LEN_CAP, chunks_per_block=8, interpret=False
+):
+    """(nc, C) int32 -> (lengths, offsets), each (nc, C) int32."""
+    x, nc = _pad_chunks(symbols.astype(jnp.int32), chunks_per_block)
+    npad, c = x.shape
+    g = chunks_per_block
+    grid = (npad // g,)
+    spec = pl.BlockSpec((g, c), lambda i: (i, 0))
+    lengths, offsets = pl.pallas_call(
+        functools.partial(_match_kernel, window=window, max_len=max_len),
+        grid=grid,
+        in_specs=[spec],
+        out_specs=[spec, spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((npad, c), jnp.int32),
+            jax.ShapeDtypeStruct((npad, c), jnp.int32),
+        ],
+        cost_estimate=_cost(npad, c, window, _levels(window, max_len)),
+        interpret=interpret,
+    )(x)
+    return lengths[:nc], offsets[:nc]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "window", "max_len", "min_match", "symbol_size",
+        "chunks_per_block", "interpret",
+    ),
+)
+def lz_kernel1_pallas(
+    symbols, *, window, min_match, symbol_size,
+    max_len=MAX_LEN_CAP, chunks_per_block=8, interpret=False,
+):
+    """Fused Kernel I: -> dict(lengths, offsets, emitted, local_off,
+    payload_sizes, n_tokens), shapes (nc, C) / (nc,)."""
+    x, nc = _pad_chunks(symbols.astype(jnp.int32), chunks_per_block)
+    npad, c = x.shape
+    g = chunks_per_block
+    grid = (npad // g,)
+    spec2d = pl.BlockSpec((g, c), lambda i: (i, 0))
+    spec1d = pl.BlockSpec((g,), lambda i: (i,))
+    sds2 = jax.ShapeDtypeStruct((npad, c), jnp.int32)
+    sds1 = jax.ShapeDtypeStruct((npad,), jnp.int32)
+    out = pl.pallas_call(
+        functools.partial(
+            _fused_kernel,
+            window=window,
+            max_len=max_len,
+            min_match=min_match,
+            symbol_size=symbol_size,
+        ),
+        grid=grid,
+        in_specs=[spec2d],
+        out_specs=[spec2d, spec2d, spec2d, spec2d, spec1d, spec1d],
+        out_shape=[sds2, sds2, sds2, sds2, sds1, sds1],
+        cost_estimate=_cost(npad, c, window, _levels(window, max_len)),
+        interpret=interpret,
+    )(x)
+    lengths, offsets, emitted, local_off, paysz, ntok = out
+    return dict(
+        lengths=lengths[:nc],
+        offsets=offsets[:nc],
+        emitted=emitted[:nc] == 1,
+        local_off=local_off[:nc],
+        payload_sizes=paysz[:nc],
+        n_tokens=ntok[:nc],
+    )

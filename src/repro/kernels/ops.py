@@ -1,0 +1,42 @@
+"""Jitted public wrappers for the Pallas kernels.
+
+On non-TPU backends the kernels run in interpret mode (Python execution of the
+kernel body) so the whole framework — including `LZSSConfig(matcher="pallas")`
+— is testable on CPU.  On TPU they compile via Mosaic.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels import lz_match as _impl
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def lz_match(symbols, *, window, max_len=_impl.MAX_LEN_CAP,
+             chunks_per_block=8):
+    """(nc, C) int32 symbols -> (lengths, offsets)."""
+    return _impl.lz_match_pallas(
+        symbols,
+        window=window,
+        max_len=max_len,
+        chunks_per_block=chunks_per_block,
+        interpret=_interpret(),
+    )
+
+
+def lz_kernel1(symbols, *, window, min_match, symbol_size,
+               max_len=_impl.MAX_LEN_CAP, chunks_per_block=8):
+    """Fused Kernel I (match + select + local prefix sum)."""
+    return _impl.lz_kernel1_pallas(
+        symbols,
+        window=window,
+        min_match=min_match,
+        symbol_size=symbol_size,
+        max_len=max_len,
+        chunks_per_block=chunks_per_block,
+        interpret=_interpret(),
+    )

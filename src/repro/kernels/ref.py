@@ -1,0 +1,36 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+``ref.lz_match`` / ``ref.lz_kernel1`` produce exactly the values the kernels
+must produce; tests sweep shapes/dtypes and assert exact equality (integer
+outputs — allclose degenerates to equality).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import encode as encode_mod
+from repro.core import match as match_mod
+
+
+def lz_match(symbols, *, window, max_len=match_mod.MAX_LEN_CAP):
+    return match_mod.find_matches(
+        symbols.astype(jnp.int32), window=window, max_len=max_len
+    )
+
+
+def lz_kernel1(symbols, *, window, min_match, symbol_size,
+               max_len=match_mod.MAX_LEN_CAP):
+    lengths, offsets = lz_match(symbols, window=window, max_len=max_len)
+    emitted = encode_mod.select_tokens_scan(lengths, min_match=min_match)
+    fields = encode_mod.token_fields(
+        lengths, emitted, min_match=min_match, symbol_size=symbol_size
+    )
+    return dict(
+        lengths=lengths,
+        offsets=offsets,
+        emitted=emitted,
+        local_off=fields["local_off"],
+        payload_sizes=fields["payload_sizes"],
+        n_tokens=fields["n_tokens"],
+    )

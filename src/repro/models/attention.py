@@ -1,0 +1,333 @@
+"""Attention mixers: GQA (with optional sliding window + qk-norm) and
+DeepSeek-V2 MLA (expanded for training, absorbed for decode).
+
+Long-sequence forward passes block over queries (lax.scan over q-blocks) so
+the (B, H, T, T) score tensor never materializes — peak attention memory is
+(B, H, q_block, T) per layer under remat.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import common
+
+NEG_INF = -1e30
+Q_BLOCK = 512  # block queries above this sequence length (fp32-score budget)
+UNROLL_BLOCKS = False  # dry-run cost mode: python loop over q-blocks so
+                       # cost_analysis counts every block (see dryrun.py)
+
+
+# --------------------------------------------------------------------- GQA
+
+
+def init_attention(key, cfg):
+    d, h, kv, dh = cfg.d_model, cfg.padded_heads, cfg.padded_kv_heads, cfg.hd
+    dt = common.dtype_of(cfg)
+    ks = common.split_keys(key, 4)
+    params = {
+        "wq": common.dense_init(ks[0], (d, h, dh), dt, in_axis_size=d),
+        "wk": common.dense_init(ks[1], (d, kv, dh), dt, in_axis_size=d),
+        "wv": common.dense_init(ks[2], (d, kv, dh), dt, in_axis_size=d),
+        "wo": common.dense_init(ks[3], (h, dh, d), dt, in_axis_size=h * dh),
+    }
+    axes = {
+        "wq": ("embed", "heads", "head_dim"),
+        "wk": ("embed", "kv_heads", "head_dim"),
+        "wv": ("embed", "kv_heads", "head_dim"),
+        "wo": ("heads", "head_dim", "embed"),
+    }
+    return params, axes
+
+
+def _mask(q_pos, k_pos, is_global, window):
+    """Causal (+ optional sliding-window) mask; is_global may be traced."""
+    causal = q_pos[:, None] >= k_pos[None, :]
+    if window:
+        in_window = (q_pos[:, None] - k_pos[None, :]) < window
+        keep = causal & (is_global | in_window)
+    else:
+        keep = causal
+    return keep
+
+
+def _attend(q, k, v, q_pos, k_pos, is_global, window):
+    """q: (B,Tq,H,dh)  k,v: (B,Tk,KV,dh)  ->  (B,Tq,H,dh)."""
+    b, tq, h, dh = q.shape
+    kvh = k.shape[2]
+    group = h // kvh
+    scale = dh ** -0.5
+    qg = q.reshape(b, tq, kvh, group, dh)
+    scores = jnp.einsum(
+        "btkgd,bskd->bkgts", qg, k, preferred_element_type=jnp.float32
+    ) * scale
+    keep = _mask(q_pos, k_pos, is_global, window)
+    scores = jnp.where(keep[None, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgts,bskd->btkgd", probs, v)
+    return out.reshape(b, tq, h, dh)
+
+
+def attention_forward(params, cfg, x, positions, is_global=True):
+    """Training/prefill attention.  Returns (out, (k, v)) — kv for caching."""
+    b, t, _ = x.shape
+    q = jnp.einsum("btd,dhk->bthk", x, params["wq"])
+    k = jnp.einsum("btd,dhk->bthk", x, params["wk"])
+    v = jnp.einsum("btd,dhk->bthk", x, params["wv"])
+    if cfg.qk_norm:
+        q = common.qk_head_norm(q, cfg.norm_eps)
+        k = common.qk_head_norm(k, cfg.norm_eps)
+    q = common.apply_rope(q, positions, cfg.rope_theta)
+    k = common.apply_rope(k, positions, cfg.rope_theta)
+
+    if t <= Q_BLOCK:
+        out = _attend(q, k, v, positions, positions, is_global,
+                      cfg.sliding_window)
+    else:
+        nb = t // Q_BLOCK
+        qb = q.reshape(b, nb, Q_BLOCK, *q.shape[2:])
+        pb = positions.reshape(nb, Q_BLOCK)
+        if UNROLL_BLOCKS:
+            outs = jnp.stack([
+                _attend(qb[:, i], k, v, pb[i], positions, is_global,
+                        cfg.sliding_window)
+                for i in range(nb)
+            ])
+        else:
+            def body(_, xs):
+                qi, pi = xs
+                o = _attend(qi, k, v, pi, positions, is_global,
+                            cfg.sliding_window)
+                return None, o
+
+            _, outs = lax.scan(body, None, (qb.swapaxes(0, 1), pb))
+        out = outs.swapaxes(0, 1).reshape(b, t, *q.shape[2:])
+    return jnp.einsum("bthk,hkd->btd", out, params["wo"]), (k, v)
+
+
+def init_kv_cache(cfg, batch, cache_len, dtype):
+    kv = cfg.padded_kv_heads
+    cache = {
+        "slot_pos": jnp.full((cache_len,), -1, jnp.int32),
+    }
+    if cfg.kv_quant:
+        # int8 cache + per (token, head) scales: ~2x less HBM per decode
+        # step read (the decode cells' dominant roofline term)
+        cache["k"] = jnp.zeros((batch, cache_len, kv, cfg.hd), jnp.int8)
+        cache["v"] = jnp.zeros((batch, cache_len, kv, cfg.hd), jnp.int8)
+        cache["k_scale"] = jnp.zeros((batch, cache_len, kv), jnp.float32)
+        cache["v_scale"] = jnp.zeros((batch, cache_len, kv), jnp.float32)
+    else:
+        cache["k"] = jnp.zeros((batch, cache_len, kv, cfg.hd), dtype)
+        cache["v"] = jnp.zeros((batch, cache_len, kv, cfg.hd), dtype)
+    return cache
+
+
+def _quantize_kv(x):
+    """(B, T, KV, dh) -> (int8 codes, (B, T, KV) scales)."""
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1) / 127.0
+    scale = jnp.maximum(scale, 1e-20)
+    codes = jnp.clip(
+        jnp.round(x.astype(jnp.float32) / scale[..., None]), -127, 127
+    ).astype(jnp.int8)
+    return codes, scale
+
+
+def _dequantize_kv(codes, scale, dtype):
+    return (codes.astype(jnp.float32) * scale[..., None]).astype(dtype)
+
+
+def attention_decode(params, cfg, cache, x, pos, is_global=True):
+    """Single-token decode with (ring-buffered, for SWA) KV cache.
+
+    x: (B, 1, d); pos: scalar int32 (current absolute position).
+    """
+    b = x.shape[0]
+    cache_len = cache["k"].shape[1]
+    q = jnp.einsum("btd,dhk->bthk", x, params["wq"])
+    k = jnp.einsum("btd,dhk->bthk", x, params["wk"])
+    v = jnp.einsum("btd,dhk->bthk", x, params["wv"])
+    if cfg.qk_norm:
+        q = common.qk_head_norm(q, cfg.norm_eps)
+        k = common.qk_head_norm(k, cfg.norm_eps)
+    posv = jnp.full((b, 1), pos, jnp.int32)
+    q = common.apply_rope(q, posv, cfg.rope_theta)
+    k = common.apply_rope(k, posv, cfg.rope_theta)  # stored post-rope
+
+    slot = pos % cache_len  # ring buffer (identity when cache covers all pos)
+    new_cache = {}
+    if cfg.kv_quant:
+        kq, ks = _quantize_kv(k)
+        vq, vs = _quantize_kv(v)
+        ckq = lax.dynamic_update_slice_in_dim(cache["k"], kq, slot, axis=1)
+        cvq = lax.dynamic_update_slice_in_dim(cache["v"], vq, slot, axis=1)
+        cks = lax.dynamic_update_slice_in_dim(cache["k_scale"], ks, slot,
+                                              axis=1)
+        cvs = lax.dynamic_update_slice_in_dim(cache["v_scale"], vs, slot,
+                                              axis=1)
+        new_cache.update(k=ckq, v=cvq, k_scale=cks, v_scale=cvs)
+        ck = _dequantize_kv(ckq, cks, x.dtype)
+        cv = _dequantize_kv(cvq, cvs, x.dtype)
+    else:
+        ck = lax.dynamic_update_slice_in_dim(cache["k"], k, slot, axis=1)
+        cv = lax.dynamic_update_slice_in_dim(cache["v"], v, slot, axis=1)
+        new_cache.update(k=ck, v=cv)
+    spos = lax.dynamic_update_slice_in_dim(
+        cache["slot_pos"], jnp.full((1,), pos, jnp.int32), slot, axis=0
+    )
+    new_cache["slot_pos"] = spos
+
+    h, kvh, dh = q.shape[2], ck.shape[2], q.shape[3]
+    group = h // kvh
+    qg = q.reshape(b, kvh, group, dh)
+    scores = jnp.einsum(
+        "bkgd,bskd->bkgs", qg, ck, preferred_element_type=jnp.float32
+    ) * (dh ** -0.5)
+    valid = (spos >= 0) & (spos <= pos)
+    if cfg.sliding_window:
+        in_win = (pos - spos) < cfg.sliding_window
+        valid = valid & (is_global | in_win)
+    scores = jnp.where(valid[None, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    out = jnp.einsum("bkgs,bskd->bkgd", probs, cv).reshape(b, 1, h, dh)
+    y = jnp.einsum("bthk,hkd->btd", out, params["wo"])
+    return y, new_cache
+
+
+# --------------------------------------------------------------------- MLA
+
+
+def init_mla(key, cfg):
+    m = cfg.mla
+    d, h = cfg.d_model, cfg.padded_heads
+    dt = common.dtype_of(cfg)
+    ks = common.split_keys(key, 6)
+    qk_dim = m.qk_nope_dim + m.qk_rope_dim
+    params = {
+        "wdq": common.dense_init(ks[0], (d, m.q_lora_rank), dt),
+        "wuq": common.dense_init(ks[1], (m.q_lora_rank, h, qk_dim), dt,
+                                 in_axis_size=m.q_lora_rank),
+        "wdkv": common.dense_init(ks[2], (d, m.kv_lora_rank), dt),
+        "wkr": common.dense_init(ks[3], (d, m.qk_rope_dim), dt),
+        "wukv": common.dense_init(
+            ks[4], (m.kv_lora_rank, h, m.qk_nope_dim + m.v_head_dim), dt,
+            in_axis_size=m.kv_lora_rank),
+        "wo": common.dense_init(ks[5], (h, m.v_head_dim, d), dt,
+                                in_axis_size=h * m.v_head_dim),
+    }
+    axes = {
+        "wdq": ("embed", "lora"),
+        "wuq": ("lora", "heads", "head_dim"),
+        "wdkv": ("embed", "lora"),
+        "wkr": ("embed", "head_dim"),
+        "wukv": ("lora", "heads", "head_dim"),
+        "wo": ("heads", "head_dim", "embed"),
+    }
+    return params, axes
+
+
+def mla_forward(params, cfg, x, positions, is_global=True):
+    """Training/prefill MLA (expanded form). Returns (out, (c_kv, k_rope))."""
+    m = cfg.mla
+    b, t, _ = x.shape
+    cq = jnp.einsum("btd,dr->btr", x, params["wdq"])
+    q = jnp.einsum("btr,rhk->bthk", cq, params["wuq"])
+    q_nope, q_rope = jnp.split(q, [m.qk_nope_dim], axis=-1)
+    q_rope = common.apply_rope(q_rope, positions, cfg.rope_theta)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+
+    c_kv = jnp.einsum("btd,dr->btr", x, params["wdkv"])
+    k_rope = jnp.einsum("btd,dr->btr", x, params["wkr"])[:, :, None, :]
+    k_rope = common.apply_rope(k_rope, positions, cfg.rope_theta)
+    kv = jnp.einsum("btr,rhk->bthk", c_kv, params["wukv"])
+    k_nope, v = jnp.split(kv, [m.qk_nope_dim], axis=-1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope, (*k_nope.shape[:3], m.qk_rope_dim))],
+        axis=-1,
+    )
+
+    b_, t_ = x.shape[:2]
+    if t_ <= Q_BLOCK:
+        out = _attend_mha(q, k, v, positions, positions)
+    else:
+        nb = t_ // Q_BLOCK
+        qb = q.reshape(b_, nb, Q_BLOCK, *q.shape[2:]).swapaxes(0, 1)
+        pb = positions.reshape(nb, Q_BLOCK)
+        if UNROLL_BLOCKS:
+            outs = jnp.stack(
+                [_attend_mha(qb[i], k, v, pb[i], positions)
+                 for i in range(nb)]
+            )
+        else:
+            def body(_, xs):
+                qi, pi = xs
+                return None, _attend_mha(qi, k, v, pi, positions)
+
+            _, outs = lax.scan(body, None, (qb, pb))
+        out = outs.swapaxes(0, 1).reshape(b_, t_, *q.shape[2:3], m.v_head_dim)
+    y = jnp.einsum("bthk,hkd->btd", out, params["wo"])
+    return y, (c_kv, k_rope[:, :, 0, :])
+
+
+def _attend_mha(q, k, v, q_pos, k_pos):
+    dh = q.shape[-1]
+    scores = jnp.einsum(
+        "bthd,bshd->bhts", q, k, preferred_element_type=jnp.float32
+    ) * (dh ** -0.5)
+    keep = q_pos[:, None] >= k_pos[None, :]
+    scores = jnp.where(keep[None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhts,bshd->bthd", probs, v)
+
+
+def init_mla_cache(cfg, batch, cache_len, dtype):
+    m = cfg.mla
+    return {
+        "c_kv": jnp.zeros((batch, cache_len, m.kv_lora_rank), dtype),
+        "k_rope": jnp.zeros((batch, cache_len, m.qk_rope_dim), dtype),
+    }
+
+
+def mla_decode(params, cfg, cache, x, pos, is_global=True):
+    """Absorbed single-token MLA decode: attention in the latent space.
+
+    The up-projections fold into the query/output (DeepSeek-V2 §2.1.2), so the
+    cache stays (kv_lora + rope_dim) per token — this is why MLA decode reads
+    ~9x fewer cache bytes than GQA at kv=128 heads.
+    """
+    m = cfg.mla
+    b = x.shape[0]
+    cq = jnp.einsum("btd,dr->btr", x, params["wdq"])
+    q = jnp.einsum("btr,rhk->bthk", cq, params["wuq"])
+    q_nope, q_rope = jnp.split(q, [m.qk_nope_dim], axis=-1)
+    posv = jnp.full((b, 1), pos, jnp.int32)
+    q_rope = common.apply_rope(q_rope, posv, cfg.rope_theta)
+
+    c_kv_new = jnp.einsum("btd,dr->btr", x, params["wdkv"])
+    k_rope_new = jnp.einsum("btd,dr->btr", x, params["wkr"])[:, :, None, :]
+    k_rope_new = common.apply_rope(k_rope_new, posv, cfg.rope_theta)[:, :, 0, :]
+
+    c_kv = lax.dynamic_update_slice_in_dim(cache["c_kv"], c_kv_new, pos, axis=1)
+    k_rope = lax.dynamic_update_slice_in_dim(
+        cache["k_rope"], k_rope_new, pos, axis=1
+    )
+
+    wuk = params["wukv"][..., : m.qk_nope_dim]      # (r, h, nope)
+    wuv = params["wukv"][..., m.qk_nope_dim:]       # (r, h, v)
+    q_abs = jnp.einsum("bthk,rhk->bthr", q_nope, wuk)  # latent-space query
+    scale = (m.qk_nope_dim + m.qk_rope_dim) ** -0.5
+    scores = (
+        jnp.einsum("bthr,bsr->bhts", q_abs, c_kv,
+                   preferred_element_type=jnp.float32)
+        + jnp.einsum("bthk,bsk->bhts", q_rope, k_rope,
+                     preferred_element_type=jnp.float32)
+    ) * scale
+    t_idx = jnp.arange(c_kv.shape[1])
+    scores = jnp.where((t_idx <= pos)[None, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    ctx = jnp.einsum("bhts,bsr->bthr", probs, c_kv)
+    out = jnp.einsum("bthr,rhk->bthk", ctx, wuv)
+    y = jnp.einsum("bthk,hkd->btd", out, params["wo"])
+    return y, {"c_kv": c_kv, "k_rope": k_rope}

@@ -1,0 +1,64 @@
+"""Shared model components: norms, RoPE, init, param-tree utilities.
+
+Params are plain dict pytrees.  Every initializer returns ``(params, axes)``
+where ``axes`` mirrors the param tree with tuples of *logical* axis names
+("embed", "heads", "ffn", "experts", "vocab", ...); sharding/rules.py maps
+logical axes to mesh axes per arch.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def dtype_of(cfg) -> jnp.dtype:
+    return jnp.dtype(cfg.dtype)
+
+
+def rms_norm(x, scale, eps):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)).astype(x.dtype) * scale
+
+
+def qk_head_norm(x, eps):
+    """Parameter-free per-head RMS norm (chameleon divergence fix)."""
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)).astype(x.dtype)
+
+
+def rope_frequencies(head_dim: int, theta: float):
+    return 1.0 / (
+        theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
+    )
+
+
+def apply_rope(x, positions, theta: float):
+    """Rotate pairs (llama convention: split halves).
+
+    x: (..., T, H, dh); positions: broadcastable to (..., T).
+    """
+    dh = x.shape[-1]
+    freqs = rope_frequencies(dh, theta)  # (dh/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., T, dh/2)
+    cos = jnp.cos(angles)[..., None, :]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def dense_init(key, shape, dtype, in_axis_size=None, scale=1.0):
+    fan_in = in_axis_size if in_axis_size is not None else shape[0]
+    std = scale / jnp.sqrt(jnp.maximum(fan_in, 1)).astype(jnp.float32)
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+
+def split_keys(key, n):
+    return list(jax.random.split(key, n))
+
+
+def tree_size_bytes(tree) -> int:
+    return sum(
+        x.size * x.dtype.itemsize for x in jax.tree_util.tree_leaves(tree)
+    )

@@ -1,0 +1,176 @@
+"""Feed-forward mixers: SwiGLU and capacity-based MoE (GShard-style dropped
+routing with sort-based dispatch — the production dropped-token regime).
+
+MoE dispatch avoids the (tokens, E, capacity) one-hot einsum (infeasible at
+1M tokens x 160 experts): slots are sorted by expert id, each slot's position
+within its expert computed from the sorted order, slots beyond capacity
+dropped, and tokens scattered into an (E, capacity, d) buffer that is sharded
+experts->model, capacity->data.  Expert FFNs run as batched einsums.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import common
+
+MOE_AUX_ALPHA = 0.01
+
+
+def _constrain(x, *spec):
+    """Sharding hint that degrades to a no-op outside a mesh context."""
+    try:
+        return jax.lax.with_sharding_constraint(x, P(*spec))
+    except (RuntimeError, ValueError, TypeError):
+        return x
+
+
+def init_swiglu(key, cfg, d_ff=None, name_axes="ffn"):
+    d = cfg.d_model
+    ff = d_ff if d_ff is not None else cfg.d_ff
+    dt = common.dtype_of(cfg)
+    ks = common.split_keys(key, 3)
+    params = {
+        "wg": common.dense_init(ks[0], (d, ff), dt),
+        "wu": common.dense_init(ks[1], (d, ff), dt),
+        "wd": common.dense_init(ks[2], (ff, d), dt, in_axis_size=ff),
+    }
+    axes = {
+        "wg": ("embed", name_axes),
+        "wu": ("embed", name_axes),
+        "wd": (name_axes, "embed"),
+    }
+    return params, axes
+
+
+def swiglu(params, x):
+    g = jax.nn.silu(jnp.einsum("...d,df->...f", x, params["wg"]))
+    u = jnp.einsum("...d,df->...f", x, params["wu"])
+    return jnp.einsum("...f,fd->...d", g * u, params["wd"])
+
+
+def init_moe(key, cfg):
+    e = cfg.moe
+    d, ff = cfg.d_model, cfg.d_ff
+    dt = common.dtype_of(cfg)
+    ks = common.split_keys(key, 5)
+    params = {
+        "router": common.dense_init(ks[0], (d, e.num_experts), jnp.float32),
+        "wg": common.dense_init(ks[1], (e.num_experts, d, ff), dt),
+        "wu": common.dense_init(ks[2], (e.num_experts, d, ff), dt),
+        "wd": common.dense_init(
+            ks[3], (e.num_experts, ff, d), dt, in_axis_size=ff
+        ),
+    }
+    axes = {
+        "router": ("embed", "experts"),
+        "wg": ("experts", "embed", "expert_ffn"),
+        "wu": ("experts", "embed", "expert_ffn"),
+        "wd": ("experts", "expert_ffn", "embed"),
+    }
+    if e.num_shared:
+        sh, shx = init_swiglu(ks[4], cfg, d_ff=ff * e.num_shared)
+        params["shared"] = sh
+        axes["shared"] = shx
+    return params, axes
+
+
+def moe_capacity(n_tokens: int, cfg) -> int:
+    e = cfg.moe
+    cap = int(n_tokens * e.top_k * e.capacity_factor / e.num_experts)
+    return max(8, -(-cap // 8) * 8)
+
+
+# Dispatch strategy (§Perf lever).  "local": tokens are routed *per data
+# shard* (vmap over a leading data-shard dim), so the dispatch scatter/gather
+# never crosses the data axis — the only MoE collective left is the combine
+# reduction over the model axis.  "global": single global dispatch buffer
+# (iteration-0 baseline; XLA partitions the cross-shard scatter poorly —
+# ~100x more collective bytes, see EXPERIMENTS.md §Perf).
+DISPATCH = "local"
+
+
+def _dispatch_one(xf, params, cfg, cap):
+    """Sort-based dropped dispatch for one token shard. xf: (n, d)."""
+    e = cfg.moe
+    n, d = xf.shape
+    k = e.top_k
+
+    logits = jnp.einsum("nd,de->ne", xf.astype(jnp.float32), params["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)          # (n, k)
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    # load-balancing aux loss (Switch/GShard form)
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.mean(
+        jnp.sum(jax.nn.one_hot(expert_idx, e.num_experts), axis=1), axis=0
+    ) / k
+    aux = MOE_AUX_ALPHA * e.num_experts * jnp.sum(me * ce)
+
+    # sort-based position-in-expert
+    slot_expert = expert_idx.reshape(-1)                      # (n*k,)
+    slot_token = jnp.arange(n * k, dtype=jnp.int32) // k
+    order = jnp.argsort(slot_expert)                          # stable
+    sorted_e = slot_expert[order]
+    seg_start = jnp.searchsorted(sorted_e, sorted_e, side="left")
+    pos_sorted = jnp.arange(n * k, dtype=jnp.int32) - seg_start
+    pos = jnp.zeros((n * k,), jnp.int32).at[order].set(pos_sorted)
+
+    keep = pos < cap
+    pos_c = jnp.where(keep, pos, cap)  # cap => dropped by scatter
+
+    buf = jnp.zeros((e.num_experts, cap, d), xf.dtype)
+    buf = buf.at[slot_expert, pos_c].add(
+        jnp.where(keep[:, None], xf[slot_token], 0), mode="drop"
+    )
+    meta = (slot_expert, pos_c, keep, slot_token, gate_vals)
+    return buf, meta, aux
+
+
+def _combine_one(y, meta, n, d, dtype):
+    slot_expert, pos_c, keep, slot_token, gate_vals = meta
+    cap = y.shape[1]
+    gathered = y[slot_expert, jnp.clip(pos_c, 0, cap - 1)]
+    gathered = jnp.where(keep[:, None], gathered, 0)
+    weighted = gathered * gate_vals.reshape(-1)[:, None].astype(dtype)
+    return jnp.zeros((n, d), dtype).at[slot_token].add(weighted)
+
+
+def moe_apply(params, cfg, x):
+    """x: (B, T, d) -> (out, aux_loss).  Dropped routing at static capacity."""
+    e = cfg.moe
+    b, t, d = x.shape
+    n = b * t
+    xf = x.reshape(n, d)
+
+    from repro.sharding import rules as shrules
+
+    shards = shrules.data_shard_count() if DISPATCH == "local" else 1
+    if n % shards:
+        shards = 1
+    n_loc = n // shards
+    cap = moe_capacity(n_loc, cfg)
+
+    xs = _constrain(xf.reshape(shards, n_loc, d), "data", None, None)
+    bufs, metas, auxs = jax.vmap(
+        lambda xi: _dispatch_one(xi, params, cfg, cap)
+    )(xs)
+    # (D, E, cap, d): data-shard major, experts on model — dispatch is local
+    bufs = _constrain(bufs, "data", "model", None, None)
+
+    g = jax.nn.silu(jnp.einsum("Decd,edf->Decf", bufs, params["wg"]))
+    u = jnp.einsum("Decd,edf->Decf", bufs, params["wu"])
+    y = jnp.einsum("Decf,efd->Decd", g * u, params["wd"])
+    y = _constrain(y, "data", "model", None, None)
+
+    out = jax.vmap(
+        lambda yi, mi: _combine_one(yi, mi, n_loc, d, x.dtype)
+    )(y, metas)
+    out = _constrain(out, "data", None, None).reshape(n, d)
+
+    if e.num_shared:
+        out = out + swiglu(params["shared"], xf)
+    return out.reshape(b, t, d), jnp.mean(auxs)

@@ -1,0 +1,101 @@
+"""Model facade: abstract shapes for dry-runs + concrete init/apply helpers.
+
+``input_specs`` follows the assignment contract: ShapeDtypeStruct stand-ins
+for every model input (weak-type-correct, shardable, no device allocation).
+Audio/VLM archs receive precomputed frame/patch embeddings from the modality
+frontend stub; text archs receive token ids.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import common, transformer
+
+
+def init_params(cfg: ModelConfig, seed: int = 0):
+    params, _ = transformer.init_params(cfg, jax.random.PRNGKey(seed))
+    return params
+
+
+def _trace_init(cfg: ModelConfig):
+    """(abstract params, axes) without allocating anything.
+
+    Axes are plain-python metadata, so they are captured by side effect while
+    eval_shape traces the initializer.
+    """
+    box = {}
+
+    def f(key):
+        p, a = transformer.init_params(cfg, key)
+        box["axes"] = a
+        return p
+
+    shapes = jax.eval_shape(f, jax.random.PRNGKey(0))
+    return shapes, box["axes"]
+
+
+@functools.lru_cache(maxsize=None)
+def _trace_init_cached(cfg: ModelConfig):
+    return _trace_init(cfg)
+
+
+def param_axes(cfg: ModelConfig):
+    return _trace_init_cached(cfg)[1]
+
+
+def abstract_params(cfg: ModelConfig):
+    return _trace_init_cached(cfg)[0]
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, seq_len: int):
+    return jax.eval_shape(
+        lambda: transformer.init_cache(cfg, batch, seq_len)
+    )
+
+
+def uses_embedding_frontend(cfg: ModelConfig) -> bool:
+    return cfg.frontend in ("audio_stub", "vision_stub")
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig):
+    """ShapeDtypeStructs for the batch of a given (arch x shape) cell."""
+    b, t = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    dt = common.dtype_of(cfg)
+    if shape.kind in ("train", "prefill"):
+        if uses_embedding_frontend(cfg):
+            # frontend stub supplies frame/patch embeddings; labels are the
+            # (audio-code / VQ / text) token targets in the shared vocab.
+            return {
+                "embeds": jax.ShapeDtypeStruct((b, t, cfg.d_model), dt),
+                "labels": jax.ShapeDtypeStruct((b, t), i32),
+            }
+        return {"tokens": jax.ShapeDtypeStruct((b, t), i32)}
+    # decode: one new token against a seq_len cache
+    return {
+        "tokens": jax.ShapeDtypeStruct((b,), i32),
+        "pos": jax.ShapeDtypeStruct((), i32),
+    }
+
+
+def make_batch(cfg: ModelConfig, shape: ShapeConfig, seed: int = 0):
+    """Concrete synthetic batch matching input_specs (for smoke tests)."""
+    key = jax.random.PRNGKey(seed)
+    specs = input_specs(cfg, shape)
+    out = {}
+    for name, s in specs.items():
+        if s.dtype == jnp.int32 and name in ("tokens", "labels"):
+            out[name] = jax.random.randint(key, s.shape, 0, cfg.vocab_size,
+                                           dtype=jnp.int32)
+        elif s.dtype == jnp.int32:
+            out[name] = jnp.zeros(s.shape, jnp.int32)
+        else:
+            out[name] = jax.random.normal(key, s.shape, jnp.float32).astype(
+                s.dtype
+            )
+    return out

@@ -1,0 +1,192 @@
+"""Mamba-2 SSD mixer (state-space duality, arXiv:2405.21060).
+
+Training uses the chunked SSD algorithm: within a chunk the recurrence is
+expanded into an attention-like (Q x Q) masked matrix (MXU-friendly matmuls);
+across chunks a lax.scan carries the (H, N, P) state.  Decode is the O(1)
+recurrent update.  Depthwise causal conv (width 4) on (x, B, C) is kept, with
+its own ring state for decode.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import common
+
+
+def _dims(cfg):
+    s = cfg.ssm
+    heads = cfg.padded_ssm_heads
+    return s, heads, heads * s.head_dim
+
+
+def init_ssm(key, cfg):
+    s, h, di = _dims(cfg)
+    d, n, w = cfg.d_model, s.d_state, s.conv_width
+    dt = common.dtype_of(cfg)
+    ks = common.split_keys(key, 8)
+    params = {
+        "wx": common.dense_init(ks[0], (d, di), dt),
+        "wz": common.dense_init(ks[1], (d, di), dt),
+        "wB": common.dense_init(ks[2], (d, n), dt),
+        "wC": common.dense_init(ks[3], (d, n), dt),
+        "wdt": common.dense_init(ks[4], (d, h), dt),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "A_log": jnp.zeros((h,), jnp.float32),
+        "D": jnp.ones((h,), jnp.float32),
+        "conv_w": common.dense_init(ks[5], (w, di + 2 * n), dt, in_axis_size=w),
+        "conv_b": jnp.zeros((di + 2 * n,), dt),
+        "norm_scale": jnp.ones((h, s.head_dim), dt),
+        "wout": common.dense_init(ks[6], (di, d), dt, in_axis_size=di),
+    }
+    axes = {
+        "wx": ("embed", "ssm_inner"),
+        "wz": ("embed", "ssm_inner"),
+        "wB": ("embed", "state"),
+        "wC": ("embed", "state"),
+        "wdt": ("embed", "ssm_heads"),
+        "dt_bias": ("ssm_heads",),
+        "A_log": ("ssm_heads",),
+        "D": ("ssm_heads",),
+        "conv_w": ("conv", "ssm_inner_conv"),
+        "conv_b": ("ssm_inner_conv",),
+        "norm_scale": ("ssm_heads", "head_dim"),
+        "wout": ("ssm_inner", "embed"),
+    }
+    return params, axes
+
+
+def _causal_conv(v, kernel, bias):
+    """Depthwise causal conv: v (B,T,F), kernel (w,F) -> (B,T,F)."""
+    w = kernel.shape[0]
+    pad = jnp.pad(v, ((0, 0), (w - 1, 0), (0, 0)))
+    out = jnp.zeros_like(v)
+    t = v.shape[1]
+    for i in range(w):
+        out = out + kernel[i] * lax.slice_in_dim(pad, i, i + t, axis=1)
+    return out + bias
+
+
+def _gated_norm(y, z, scale, eps):
+    """y,z: (..., H, P).  y * silu(z) -> per-head RMS norm with scale."""
+    g = y * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(jnp.square(g), axis=-1, keepdims=True)
+    return (g * lax.rsqrt(var + eps)) * scale.astype(jnp.float32)
+
+
+def ssm_forward(params, cfg, x, positions=None, is_global=True):
+    """Chunked SSD training/prefill pass.  Returns (out, final_state)."""
+    s, h, di = _dims(cfg)
+    n, p, q = s.d_state, s.head_dim, s.chunk
+    b, t_in, _ = x.shape
+    pad = (-t_in) % q
+    if pad:  # zero-pad to a whole chunk; padded outputs sliced off below
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+    t = t_in + pad
+    nk = t // q
+
+    u = jnp.einsum("btd,df->btf", x, params["wx"])
+    z = jnp.einsum("btd,df->btf", x, params["wz"])
+    bm = jnp.einsum("btd,dn->btn", x, params["wB"])
+    cm = jnp.einsum("btd,dn->btn", x, params["wC"])
+    conv_in = jnp.concatenate([u, bm, cm], axis=-1)
+    conv_out = jax.nn.silu(
+        _causal_conv(conv_in, params["conv_w"], params["conv_b"]).astype(
+            jnp.float32
+        )
+    ).astype(x.dtype)
+    u, bm, cm = jnp.split(conv_out, [di, di + n], axis=-1)
+
+    dt = jax.nn.softplus(
+        jnp.einsum("btd,dh->bth", x, params["wdt"]).astype(jnp.float32)
+        + params["dt_bias"]
+    )  # (B,T,H) fp32
+    a = jnp.exp(params["A_log"])  # (H,)
+    log_a = -dt * a               # (B,T,H), <= 0
+
+    xc = u.reshape(b, nk, q, h, p)
+    bc = bm.reshape(b, nk, q, n)
+    cc = cm.reshape(b, nk, q, n)
+    dtc = dt.reshape(b, nk, q, h)
+    la = jnp.cumsum(log_a.reshape(b, nk, q, h), axis=2)  # inclusive
+
+    # ---- intra-chunk (attention-like masked matmul) ----
+    srel = jnp.einsum("bkin,bkjn->bkij", cc, bc,
+                      preferred_element_type=jnp.float32)
+    seg = la[:, :, :, None, :] - la[:, :, None, :, :]     # (b,nk,i,j,h)
+    iq = jnp.arange(q)
+    causal = (iq[:, None] >= iq[None, :])[None, None, :, :, None]
+    m = jnp.where(causal, jnp.exp(seg), 0.0) * dtc[:, :, None, :, :]
+    m = m * srel[:, :, :, :, None]
+    y_intra = jnp.einsum("bkijh,bkjhp->bkihp", m.astype(x.dtype), xc)
+
+    # ---- chunk states + inter-chunk recurrence ----
+    wj = jnp.exp(la[:, :, -1:, :] - la) * dtc             # (b,nk,q,h)
+    g = jnp.einsum("bkjn,bkjh,bkjhp->bkhnp", bc, wj.astype(x.dtype), xc,
+                   preferred_element_type=jnp.float32)
+    total_decay = jnp.exp(la[:, :, -1, :])                # (b,nk,h)
+
+    def step(st, inp):
+        g_k, tk = inp
+        return st * tk[..., None, None] + g_k, st
+
+    init = jnp.zeros((b, h, n, p), jnp.float32)
+    final_state, prev = lax.scan(
+        step, init, (g.swapaxes(0, 1), total_decay.swapaxes(0, 1))
+    )
+    prev = prev.swapaxes(0, 1)                            # (b,nk,h,n,p)
+
+    y_inter = jnp.einsum("bkin,bkhnp->bkihp", cc, prev.astype(x.dtype))
+    y_inter = y_inter * jnp.exp(la)[..., None].astype(x.dtype)
+
+    y = (y_intra + y_inter).reshape(b, t, h, p)
+    y = y + params["D"].astype(x.dtype)[None, None, :, None] * u.reshape(
+        b, t, h, p
+    )
+    zi = z.reshape(b, t, h, p)
+    out = _gated_norm(y.astype(jnp.float32), zi, params["norm_scale"],
+                      cfg.norm_eps).astype(x.dtype)
+    out = jnp.einsum("btf,fd->btd", out.reshape(b, t, di), params["wout"])
+    return out[:, :t_in], final_state
+
+
+def init_ssm_cache(cfg, batch, dtype):
+    s, h, di = _dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, s.conv_width - 1, di + 2 * s.d_state), dtype),
+        "state": jnp.zeros((batch, h, s.d_state, s.head_dim), jnp.float32),
+    }
+
+
+def ssm_decode(params, cfg, cache, x, pos=None, is_global=True):
+    """O(1) recurrent decode step.  x: (B,1,d)."""
+    s, h, di = _dims(cfg)
+    n, p = s.d_state, s.head_dim
+    b = x.shape[0]
+
+    u = jnp.einsum("btd,df->btf", x, params["wx"])
+    bm = jnp.einsum("btd,dn->btn", x, params["wB"])
+    cm = jnp.einsum("btd,dn->btn", x, params["wC"])
+    v = jnp.concatenate([u, bm, cm], axis=-1)             # (B,1,F)
+    full = jnp.concatenate([cache["conv"], v], axis=1)    # (B,w,F)
+    conv = jnp.einsum("bwf,wf->bf", full, params["conv_w"]) + params["conv_b"]
+    conv = jax.nn.silu(conv.astype(jnp.float32)).astype(x.dtype)
+    u1, b1, c1 = jnp.split(conv, [di, di + n], axis=-1)
+
+    dt = jax.nn.softplus(
+        jnp.einsum("btd,dh->bth", x, params["wdt"])[:, 0].astype(jnp.float32)
+        + params["dt_bias"]
+    )                                                     # (B,H)
+    a = jnp.exp(-dt * jnp.exp(params["A_log"]))           # (B,H)
+    xh = u1.reshape(b, h, p).astype(jnp.float32)
+    state = cache["state"] * a[..., None, None] + jnp.einsum(
+        "bn,bh,bhp->bhnp", b1.astype(jnp.float32), dt, xh
+    )
+    y = jnp.einsum("bn,bhnp->bhp", c1.astype(jnp.float32), state)
+    y = y + params["D"][None, :, None] * xh
+    z = jnp.einsum("btd,df->btf", x, params["wz"])[:, 0].reshape(b, h, p)
+    out = _gated_norm(y, z, params["norm_scale"], cfg.norm_eps).astype(x.dtype)
+    out = jnp.einsum("bf,fd->bd", out.reshape(b, di), params["wout"])
+    return out[:, None, :], {"conv": full[:, 1:], "state": state}

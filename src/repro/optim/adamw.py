@@ -1,0 +1,78 @@
+"""Sharded AdamW + LR schedule + global-norm clipping.
+
+Optimizer state (m, v) is fp32 and — under ``TrainConfig.zero_opt_state`` —
+additionally sharded over the data axis (ZeRO-style), which is what lets the
+236B MoE config fit 16 GB/chip (DESIGN.md §5).  Params update in their own
+dtype (master-less AdamW with fp32 moments, the common large-scale setup).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def lr_schedule(step, cfg):
+    """Linear warmup -> cosine decay to 10%."""
+    step = step.astype(jnp.float32)
+    warm = cfg.learning_rate * step / jnp.maximum(cfg.warmup_steps, 1)
+    prog = jnp.clip(
+        (step - cfg.warmup_steps)
+        / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+        0.0,
+        1.0,
+    )
+    cos = cfg.learning_rate * (0.1 + 0.45 * (1 + jnp.cos(jnp.pi * prog)))
+    return jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def init_opt_state(params):
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+    }
+
+
+def global_norm(tree):
+    return jnp.sqrt(
+        sum(
+            jnp.sum(jnp.square(x.astype(jnp.float32)))
+            for x in jax.tree.leaves(tree)
+        )
+    )
+
+
+def clip_by_global_norm(grads, max_norm):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), norm
+
+
+def adamw_update(params, grads, opt_state, step, cfg):
+    """One AdamW step.  Returns (new_params, new_opt_state, metrics)."""
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    lr = lr_schedule(step, cfg)
+    b1, b2, wd = cfg.beta1, cfg.beta2, cfg.weight_decay
+    t = step.astype(jnp.float32) + 1.0
+    c1 = 1.0 - b1 ** t
+    c2 = 1.0 - b2 ** t
+
+    def upd(p, g, m, v):
+        g32 = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * g32
+        v = b2 * v + (1 - b2) * jnp.square(g32)
+        mh = m / c1
+        vh = v / c2
+        delta = mh / (jnp.sqrt(vh) + 1e-8) + wd * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(opt_state["m"])
+    flat_v = jax.tree.leaves(opt_state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_m = jax.tree.unflatten(treedef, [o[1] for o in out])
+    new_v = jax.tree.unflatten(treedef, [o[2] for o in out])
+    return new_p, {"m": new_m, "v": new_v}, {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,208 @@
+"""Cross-pod gradient exchange with GPULZ compression (the paper's
+inter-node-communication use case, in-graph).
+
+Topology assumption: the pod axis is the slow link (inter-pod DCN/ICI).
+Within a pod, gradients reduce in bf16 (XLA-inserted collectives).  Across
+pods, each leaf is:
+
+  1. quantized to uint16 codes with a per-leaf symmetric scale
+     (+ optional error-feedback accumulator),
+  2. GPULZ-compressed in-graph (``compress_chunks`` — symbols ARE the codes,
+     S=2), into a buffer **capped at the raw-int16 size** so the exchange is
+     never worse than 2 bytes/element (2x smaller than bf16+fp32-master
+     exchanges, more when the codes compress),
+  3. exchanged over the pod axis with ``lax.ppermute`` (ring for >2 pods),
+  4. decoded in-graph (tables parsed straight from the received blob) and
+     averaged.
+
+When the compressed stream does not fit the cap (incompressible gradients)
+the raw uint16 codes are sent instead, signalled by a one-hot flag — the
+exchange stays fixed-shape either way, which is what fixed-topology
+collectives require.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import format as fmt
+from repro.core.lzss import LZSSConfig, compress_chunks, decompress_chunks
+
+GRAD_LZ = LZSSConfig(symbol_size=2, window=32, chunk_symbols=2048,
+                     selector="doubling", decoder="parallel")
+MIN_COMPRESS_SIZE = 65_536  # leaves below this exchange raw (graph economy)
+
+
+def quantize_u16(x):
+    """Symmetric uint16 quantization.  Returns (codes int32 in [0,65535], scale)."""
+    x32 = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(x32)), 1e-30) / 32767.0
+    codes = jnp.clip(jnp.round(x32 / scale), -32767, 32767).astype(jnp.int32)
+    return codes + 32768, scale
+
+
+def dequantize_u16(codes, scale):
+    return (codes.astype(jnp.float32) - 32768.0) * scale
+
+
+def _pad_to_chunks(codes_flat, c):
+    n = codes_flat.shape[0]
+    nc = -(-n // c)
+    pad = nc * c - n
+    return jnp.pad(codes_flat, (0, pad)), nc
+
+
+def _parse_tables(blob_i32, nc):
+    """In-graph section A/B parse (u32 little-endian)."""
+    def sec(base):
+        rows = blob_i32[base : base + 4 * nc].reshape(nc, 4)
+        return (
+            rows[:, 0] | (rows[:, 1] << 8) | (rows[:, 2] << 16)
+            | (rows[:, 3] << 24)
+        )
+
+    return sec(fmt.HEADER_BYTES), sec(fmt.HEADER_BYTES + 4 * nc)
+
+
+SLAB_SYMBOLS = 1 << 24  # 16M symbols (32 MB) per slab: int32-offset safe,
+                        # and slabs compress in parallel (vmap)
+
+
+def _slab_geometry(n: int, cfg: LZSSConfig):
+    c = cfg.chunk_symbols
+    slab = min(SLAB_SYMBOLS, -(-n // c) * c)
+    slab = -(-slab // c) * c
+    n_slabs = -(-n // slab)
+    return slab, n_slabs
+
+
+def _cap_bytes(slab: int, ratio_cap: float) -> int:
+    """Wire budget per slab: raw-int16 bytes / ratio_cap (>= 1 B/elem)."""
+    return max(slab, int(slab * 2 / max(ratio_cap, 1.0)))
+
+
+def _compress_slab(padded_slab, cfg, ratio_cap):
+    """(slab,) int32 codes -> (payload u8[cap], used_lz).
+
+    Budget = 2/ratio_cap bytes/element.  If the LZSS container fits, the
+    exchange is lossless w.r.t. the uint16 codes; otherwise the slab degrades
+    to the codes' high bytes (int8 precision — error feedback recommended,
+    see CompressionConfig).
+    """
+    slab = padded_slab.shape[0]
+    c = cfg.chunk_symbols
+    nc = slab // c
+    cap = _cap_bytes(slab, ratio_cap)
+    blob, total = compress_chunks(padded_slab.reshape(nc, c), cfg)
+    used_lz = total <= cap
+    if cap >= slab * 2:  # budget fits raw u16: lossless fallback
+        fb = jnp.stack(
+            [padded_slab & 0xFF, padded_slab >> 8], axis=1
+        ).reshape(-1)[:cap]
+    else:                # tight budget: int8 fallback (high bytes)
+        fb = jnp.pad(padded_slab >> 8, (0, max(0, cap - slab)))[:cap]
+    payload = jnp.where(used_lz, blob[:cap].astype(jnp.int32), fb)
+    return payload.astype(jnp.uint8), used_lz
+
+
+def _decompress_slab(payload, used_lz, slab, cfg):
+    """Inverse of _compress_slab -> (slab,) int32 codes."""
+    c = cfg.chunk_symbols
+    nc = slab // c
+    cap_full = fmt.max_compressed_bytes(slab * 2, 2, c)
+    p32 = payload.astype(jnp.int32)
+    blob = jnp.zeros((cap_full,), jnp.int32).at[: p32.shape[0]].set(p32)
+    n_tokens, payload_sizes = _parse_tables(blob, nc)
+    syms_lz = decompress_chunks(
+        blob.astype(jnp.uint8), n_tokens, payload_sizes,
+        symbol_size=2, chunk_symbols=c, n_chunks=nc, decoder=cfg.decoder,
+    ).reshape(-1)
+    cap = p32.shape[0]
+    if cap >= slab * 2:  # lossless raw-u16 fallback
+        pairs = p32[: slab * 2].reshape(-1, 2)
+        syms_raw = pairs[:, 0] | (pairs[:, 1] << 8)
+    else:                # int8 fallback: centre of the low byte
+        hi = jnp.pad(p32, (0, max(0, slab - cap)))[:slab]
+        syms_raw = (hi << 8) | 128
+    return jnp.where(used_lz, syms_lz, syms_raw)
+
+
+def compress_leaf(g, cfg: LZSSConfig = GRAD_LZ, ratio_cap: float = 2.0):
+    """Gradient leaf -> fixed-size wire format.
+
+    Returns dict: payload (uint8, 2/ratio_cap bytes/elem), used_lz (bool per
+    slab), scale (f32).  Large leaves are slab-split (int32-offset safety +
+    parallel compression); slabs whose LZSS container exceeds the budget
+    degrade to int8 precision (used_lz=False).
+    """
+    n = g.size
+    codes, scale = quantize_u16(g.reshape(-1))
+    slab, n_slabs = _slab_geometry(n, cfg)
+    padded = jnp.pad(codes, (0, n_slabs * slab - n)).reshape(n_slabs, slab)
+    payload, used_lz = jax.vmap(
+        lambda s: _compress_slab(s, cfg, ratio_cap)
+    )(padded)
+    return {
+        "payload": payload.reshape(-1),
+        "used_lz": used_lz,
+        "scale": scale,
+    }
+
+
+def decompress_leaf(wire, shape, cfg: LZSSConfig = GRAD_LZ,
+                    ratio_cap: float = 2.0):
+    """Inverse of compress_leaf -> fp32 gradient leaf."""
+    n = 1
+    for s in shape:
+        n *= s
+    slab, n_slabs = _slab_geometry(n, cfg)
+    cap = _cap_bytes(slab, ratio_cap)
+    payload = wire["payload"].reshape(n_slabs, cap)
+    codes = jax.vmap(lambda p, u: _decompress_slab(p, u, slab, cfg))(
+        payload, wire["used_lz"]
+    ).reshape(-1)[:n]
+    return dequantize_u16(codes, wire["scale"]).reshape(shape)
+
+
+def pod_exchange_compressed(grad_stack, mesh, compress: bool = True,
+                            cfg: LZSSConfig = GRAD_LZ,
+                            ratio_cap: float = 2.0):
+    """Average pod-stacked gradients; the pod-axis collective carries only
+    compressed bytes.
+
+    ``grad_stack`` leaves have a leading (n_pods,) dim sharded over "pod"
+    (produced by vmap-ing the grad computation over a pod-split batch).  Each
+    pod's slice is compressed *while still pod-sharded*, the fixed-size wire
+    is replicated across the pod axis (an all-gather of compressed bytes —
+    the only inter-pod traffic), then every pod decodes all slices locally
+    and averages.  Expressed in pure pjit: no shard_map, no manual
+    collectives — the SPMD partitioner materializes exactly one pod-axis
+    all-gather per leaf, sized at the wire cap (2 bytes/elem or less).
+    """
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    n_pods = mesh.shape["pod"]
+    rep = lambda x: jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*([None] * x.ndim)))
+    )
+
+    def exchange_leaf(g):
+        shape = g.shape[1:]
+        size = 1
+        for s in shape:
+            size *= s
+        if not compress or size < MIN_COMPRESS_SIZE:
+            return jnp.mean(rep(g).astype(jnp.float32), axis=0).astype(g.dtype)
+        wire = jax.vmap(lambda x: compress_leaf(x, cfg, ratio_cap))(g)
+        wire = jax.tree.map(rep, wire)  # <- compressed pod all-gather
+        acc = 0.0
+        for k in range(n_pods):
+            wk = jax.tree.map(lambda x: x[k], wire)
+            acc = acc + decompress_leaf(wk, shape, cfg, ratio_cap)
+        return (acc / n_pods).astype(g.dtype)
+
+    return jax.tree.map(exchange_leaf, grad_stack)

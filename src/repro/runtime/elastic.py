@@ -1,0 +1,48 @@
+"""Elastic scaling: restore a checkpoint onto a different mesh.
+
+Checkpoints are mesh-agnostic (full logical arrays, checkpoint/manager.py),
+and shardings are *derived* from logical axis rules per mesh — so scaling
+from 1 pod to 2 (or 16x16 to 8x32, or recovering with a dead slice cordoned
+off) is: build the new mesh, recompute shardings, restore.  Batch math
+(per-pod microbatching) rescales so the global batch — and therefore the
+training trajectory — is preserved.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+
+from repro.launch import steps as steps_lib
+
+
+@dataclasses.dataclass(frozen=True)
+class ElasticPlan:
+    old_axes: dict
+    new_axes: dict
+    microbatch_scale: float  # multiply TrainConfig.microbatches by this
+
+    def describe(self) -> str:
+        return (
+            f"remesh {self.old_axes} -> {self.new_axes}; "
+            f"microbatches x{self.microbatch_scale:g}"
+        )
+
+
+def plan_remesh(old_mesh, new_mesh) -> ElasticPlan:
+    oa = dict(zip(old_mesh.axis_names, old_mesh.devices.shape))
+    na = dict(zip(new_mesh.axis_names, new_mesh.devices.shape))
+    old_dp = oa.get("pod", 1) * oa.get("data", 1)
+    new_dp = na.get("pod", 1) * na.get("data", 1)
+    # fewer data-parallel ranks => more microbatches to hold global batch
+    return ElasticPlan(oa, na, microbatch_scale=old_dp / max(1, new_dp))
+
+
+def restore_onto_mesh(manager, cfg, traincfg, new_mesh, template=None):
+    """Restore the latest checkpoint with shardings for ``new_mesh``."""
+    if template is None:
+        template = steps_lib.abstract_train_state(cfg, traincfg)
+    shardings = steps_lib.train_state_shardings(cfg, traincfg, new_mesh)
+    state, step = manager.restore_latest(template, shardings)
+    return state, step

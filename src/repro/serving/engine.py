@@ -1,0 +1,62 @@
+"""Batched serving engine: prefill-by-decode + greedy generation loop.
+
+Small-scale reference engine over transformer.decode_step: fixed batch of
+sequences, per-step greedy sampling, optional KV block eviction through
+serving/kvcache.py.  The compiled serve path for roofline purposes is
+launch/steps.py:make_decode_step; this engine is the correctness harness and
+example driver.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import transformer
+from repro.serving.kvcache import KVBlockStore, PagedKVTracker
+
+
+@dataclasses.dataclass
+class GenerationResult:
+    tokens: np.ndarray      # (B, T_out)
+    steps: int
+
+
+class ServingEngine:
+    def __init__(self, cfg, params, max_len: int = 512, kv_compress=False):
+        self.cfg = cfg
+        self.params = params
+        self.max_len = max_len
+        self.kv_store = KVBlockStore(compress=kv_compress)
+        self.tracker = PagedKVTracker()
+        self._step = jax.jit(
+            lambda p, c, t, pos: transformer.decode_step(p, cfg, c, t, pos)
+        )
+
+    def generate(self, prompts: np.ndarray, max_new_tokens: int = 32,
+                 eos_id: int = -1) -> GenerationResult:
+        """prompts: (B, Tp) int32.  Greedy decode."""
+        b, tp = prompts.shape
+        caches = transformer.init_cache(self.cfg, b, self.max_len)
+        toks = jnp.asarray(prompts[:, 0])
+        outs = [np.asarray(toks)]
+        logits = None
+        n_steps = 0
+        for pos in range(min(tp + max_new_tokens - 1, self.max_len - 1)):
+            logits, caches = self._step(
+                self.params, caches, toks, jnp.int32(pos)
+            )
+            n_steps += 1
+            for sid in range(b):
+                self.tracker.touch(sid, pos)
+            if pos + 1 < tp:
+                toks = jnp.asarray(prompts[:, pos + 1])  # teacher-forced prefill
+            else:
+                toks = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            outs.append(np.asarray(toks))
+            if eos_id >= 0 and bool(jnp.all(toks == eos_id)):
+                break
+        return GenerationResult(tokens=np.stack(outs, axis=1), steps=n_steps)

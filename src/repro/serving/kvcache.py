@@ -1,0 +1,90 @@
+"""KV-cache block manager with GPULZ eviction compression.
+
+The in-graph decode caches live in launch/steps.py; this module is the
+host-side block manager a serving deployment wraps around them: fixed-size
+blocks, LRU eviction of cold blocks to host memory, evicted blocks GPULZ-
+compressed (S=2 over bf16 — the paper's multi-byte rule for 2-byte data).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from repro.core import lzss
+
+KV_LZ = lzss.LZSSConfig(symbol_size=2, window=64, chunk_symbols=2048)
+
+
+@dataclasses.dataclass
+class BlockStats:
+    evictions: int = 0
+    restores: int = 0
+    evicted_bytes_raw: int = 0
+    evicted_bytes_stored: int = 0
+
+    @property
+    def eviction_ratio(self) -> float:
+        return self.evicted_bytes_raw / max(1, self.evicted_bytes_stored)
+
+
+class KVBlockStore:
+    """Host-side store of evicted KV blocks, compressed with GPULZ."""
+
+    def __init__(self, compress: bool = True, config=KV_LZ):
+        self.compress = compress
+        self.config = config
+        self._store: dict = {}
+        self.stats = BlockStats()
+
+    def evict(self, key, block: np.ndarray):
+        raw = np.ascontiguousarray(block)
+        meta = (raw.dtype.str, raw.shape)
+        if self.compress:
+            res = lzss.compress(raw.view(np.uint8).reshape(-1), self.config)
+            self._store[key] = ("gpulz", meta, res.data)
+            self.stats.evicted_bytes_stored += res.total_bytes
+        else:
+            self._store[key] = ("raw", meta, raw.tobytes())
+            self.stats.evicted_bytes_stored += raw.nbytes
+        self.stats.evictions += 1
+        self.stats.evicted_bytes_raw += raw.nbytes
+
+    def restore(self, key) -> np.ndarray:
+        codec, (dtype, shape), payload = self._store.pop(key)
+        self.stats.restores += 1
+        if codec == "gpulz":
+            raw = lzss.decompress(payload)
+            return raw.view(np.dtype(dtype)).reshape(shape)
+        return np.frombuffer(payload, np.dtype(dtype)).reshape(shape)
+
+    def __contains__(self, key):
+        return key in self._store
+
+    def __len__(self):
+        return len(self._store)
+
+
+class PagedKVTracker:
+    """Block-granular access tracking -> eviction candidates (LRU)."""
+
+    def __init__(self, block_tokens: int = 256, budget_blocks: int = 1024):
+        self.block_tokens = block_tokens
+        self.budget = budget_blocks
+        self._last_access: dict = {}
+
+    def touch(self, seq_id: int, pos: int):
+        blk = pos // self.block_tokens
+        self._last_access[(seq_id, blk)] = time.monotonic()
+
+    def eviction_candidates(self):
+        if len(self._last_access) <= self.budget:
+            return []
+        n = len(self._last_access) - self.budget
+        items = sorted(self._last_access.items(), key=lambda kv: kv[1])
+        return [k for k, _ in items[:n]]
+
+    def drop(self, key):
+        self._last_access.pop(key, None)

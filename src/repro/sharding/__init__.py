@@ -1,0 +1,23 @@
+from repro.sharding.rules import (
+    LOGICAL_RULES,
+    activation_spec,
+    batch_axes,
+    batch_spec,
+    params_pspecs,
+    params_shardings,
+    spec_for,
+    zero_shardings,
+    zero_spec,
+)
+
+__all__ = [
+    "LOGICAL_RULES",
+    "activation_spec",
+    "batch_axes",
+    "batch_spec",
+    "params_pspecs",
+    "params_shardings",
+    "spec_for",
+    "zero_shardings",
+    "zero_spec",
+]

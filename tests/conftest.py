@@ -1,0 +1,14 @@
+import os
+import sys
+
+# Make `import repro` work without installation (tests run via
+# `PYTHONPATH=src pytest tests/`; this is belt-and-braces for bare pytest).
+_SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+if os.path.abspath(_SRC) not in [os.path.abspath(p) for p in sys.path]:
+    sys.path.insert(0, os.path.abspath(_SRC))
+
+from hypothesis import settings
+
+# CPU-only container: generous deadlines, few examples (jit compile cost).
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")

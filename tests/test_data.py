@@ -1,0 +1,40 @@
+"""Data pipeline: determinism + exact resume + shapes."""
+
+import numpy as np
+
+from repro.data.pipeline import DataConfig, make_batch_for_step
+
+
+def test_deterministic_per_step():
+    cfg = DataConfig(vocab_size=1000, seq_len=128, global_batch=4, seed=3)
+    a = make_batch_for_step(cfg, 17)["tokens"]
+    b = make_batch_for_step(cfg, 17)["tokens"]
+    np.testing.assert_array_equal(a, b)
+    c = make_batch_for_step(cfg, 18)["tokens"]
+    assert not np.array_equal(a, c)
+
+
+def test_resume_is_pure_function_of_step():
+    """Restart-from-checkpoint reproduces the stream with no iterator state."""
+    cfg = DataConfig(vocab_size=1000, seq_len=64, global_batch=2, seed=0)
+    run1 = [make_batch_for_step(cfg, s)["tokens"] for s in range(6)]
+    run2 = [make_batch_for_step(cfg, s)["tokens"] for s in range(3, 6)]
+    for a, b in zip(run1[3:], run2):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_shapes_and_vocab_range():
+    cfg = DataConfig(vocab_size=777, seq_len=32, global_batch=3, seed=1)
+    t = make_batch_for_step(cfg, 0)["tokens"]
+    assert t.shape == (3, 32) and t.dtype == np.int32
+    assert t.min() >= 0 and t.max() < 777
+
+
+def test_mmap_source(tmp_path):
+    path = tmp_path / "tokens.bin"
+    data = np.arange(1024, dtype=np.int32)
+    data.tofile(path)
+    cfg = DataConfig(vocab_size=2048, seq_len=16, global_batch=4,
+                     source="mmap", path=str(path))
+    t0 = make_batch_for_step(cfg, 0)["tokens"]
+    np.testing.assert_array_equal(t0.reshape(-1), np.arange(64))

@@ -1,0 +1,76 @@
+"""Gradient wire format: quantization bounds + compress/decompress parity."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.lzss import LZSSConfig
+from repro.optim import grad_compress as gc
+
+
+def test_quantize_roundtrip_bound():
+    rng = np.random.default_rng(0)
+    g = rng.normal(size=4096).astype(np.float32) * 0.01
+    codes, scale = gc.quantize_u16(jnp.asarray(g))
+    back = np.asarray(gc.dequantize_u16(codes, scale))
+    # symmetric int16 quantization: error <= scale/2 (+ fp32 rounding)
+    assert np.abs(back - g).max() <= float(scale) * 0.5001
+
+
+@pytest.mark.parametrize("redundant", [True, False])
+def test_wire_roundtrip_lossless_budget(redundant):
+    """ratio_cap=1 (2 B/elem budget): always lossless w.r.t. u16 codes."""
+    rng = np.random.default_rng(1)
+    if redundant:
+        g = np.repeat(rng.normal(size=512) * 0.1, 16).astype(np.float32)
+    else:
+        g = rng.normal(size=8192).astype(np.float32)
+    cfg = LZSSConfig(symbol_size=2, window=32, chunk_symbols=512,
+                     selector="doubling")
+    wire = gc.compress_leaf(jnp.asarray(g), cfg, ratio_cap=1.0)
+    out = np.asarray(gc.decompress_leaf(wire, g.shape, cfg, ratio_cap=1.0))
+    codes, scale = gc.quantize_u16(jnp.asarray(g))
+    want = np.asarray(gc.dequantize_u16(codes, scale))
+    np.testing.assert_allclose(out, want, atol=1e-12)
+    nsym = -(-g.size // 512) * 512
+    assert wire["payload"].size == nsym * 2
+
+
+def test_wire_tight_budget_halves_bytes():
+    """ratio_cap=2 (1 B/elem): half the bf16 exchange; compressible slabs
+    stay u16-lossless, noise slabs degrade to int8."""
+    rng = np.random.default_rng(1)
+    sparse = jnp.zeros((8192,), jnp.float32).at[::64].set(0.5)
+    cfg = LZSSConfig(symbol_size=2, window=32, chunk_symbols=512,
+                     selector="doubling")
+    wire = gc.compress_leaf(sparse, cfg, ratio_cap=2.0)
+    assert wire["payload"].size == 8192  # 1 B/elem
+    assert bool(jnp.all(wire["used_lz"]))
+    out = np.asarray(gc.decompress_leaf(wire, (8192,), cfg, ratio_cap=2.0))
+    codes, scale = gc.quantize_u16(sparse)
+    want = np.asarray(gc.dequantize_u16(codes, scale))
+    np.testing.assert_allclose(out, want, atol=1e-12)  # u16-lossless
+
+    noise = jnp.asarray(rng.normal(size=8192).astype(np.float32))
+    wire_n = gc.compress_leaf(noise, cfg, ratio_cap=2.0)
+    assert not bool(jnp.all(wire_n["used_lz"]))  # int8 fallback
+    out_n = np.asarray(gc.decompress_leaf(wire_n, (8192,), cfg,
+                                          ratio_cap=2.0))
+    _, scale_n = gc.quantize_u16(noise)
+    # int8 fallback error bounded by 128*scale
+    assert np.abs(out_n - np.asarray(noise)).max() <= float(scale_n) * 129
+
+
+def test_wire_uses_lz_on_redundant_grads():
+    g = jnp.zeros((65536,), jnp.float32).at[::100].set(0.5)
+    wire = gc.compress_leaf(g, ratio_cap=1.0)
+    assert bool(jnp.all(wire["used_lz"]))
+
+
+def test_wire_falls_back_on_noise():
+    rng = np.random.default_rng(2)
+    g = jnp.asarray(rng.normal(size=65536).astype(np.float32))
+    wire = gc.compress_leaf(g, ratio_cap=1.0)
+    # pure gaussian noise codes don't compress below 2B/elem with LZSS
+    assert not bool(jnp.all(wire["used_lz"]))

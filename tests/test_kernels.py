@@ -1,0 +1,75 @@
+"""Pallas kernels vs pure-jnp oracles — shape/dtype/config sweeps in
+interpret mode (TPU is the compile target; interpret executes the kernel
+body on CPU for correctness).  Integer outputs => exact equality."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels import lz_match as kmod, ref
+
+
+def _data(nc, c, vocab, seed):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.integers(0, vocab, size=(nc, c)).astype(np.int32))
+
+
+@pytest.mark.parametrize("c", [128, 256, 512])
+@pytest.mark.parametrize("w", [8, 32, 128])
+@pytest.mark.parametrize("g", [2, 8])
+def test_match_kernel_sweep(c, w, g):
+    syms = _data(5, c, 4, c + w)
+    got_l, got_o = kmod.lz_match_pallas(
+        syms, window=w, chunks_per_block=g, interpret=True
+    )
+    exp_l, exp_o = ref.lz_match(syms, window=w)
+    np.testing.assert_array_equal(np.asarray(got_l), np.asarray(exp_l))
+    np.testing.assert_array_equal(np.asarray(got_o), np.asarray(exp_o))
+
+
+@pytest.mark.parametrize("w", [17, 255])
+def test_match_kernel_odd_windows(w):
+    syms = _data(3, 192, 2, w)
+    got_l, got_o = kmod.lz_match_pallas(
+        syms, window=w, chunks_per_block=4, interpret=True
+    )
+    exp_l, exp_o = ref.lz_match(syms, window=w)
+    np.testing.assert_array_equal(np.asarray(got_l), np.asarray(exp_l))
+    np.testing.assert_array_equal(np.asarray(got_o), np.asarray(exp_o))
+
+
+@pytest.mark.parametrize("s,mm", [(1, 3), (2, 2), (4, 1)])
+@pytest.mark.parametrize("c", [128, 512])
+def test_fused_kernel1_sweep(s, mm, c):
+    syms = _data(4, c, 6, s * c)
+    got = kmod.lz_kernel1_pallas(
+        syms, window=32, min_match=mm, symbol_size=s,
+        chunks_per_block=4, interpret=True,
+    )
+    exp = ref.lz_kernel1(syms, window=32, min_match=mm, symbol_size=s)
+    for k in exp:
+        np.testing.assert_array_equal(
+            np.asarray(got[k]), np.asarray(exp[k]), err_msg=f"field {k}"
+        )
+
+
+def test_kernel_symbol_dtypes():
+    """Symbols packed from u8/u16/u32 views (incl. negative int32 patterns)."""
+    rng = np.random.default_rng(0)
+    raw = rng.integers(0, 2**32 - 1, size=(2, 256), dtype=np.uint32)
+    raw[:, 50:70] = raw[:, 10:30]  # plant repeats
+    syms = jnp.asarray(raw.view(np.int32))
+    got_l, got_o = kmod.lz_match_pallas(syms, window=64, interpret=True)
+    exp_l, exp_o = ref.lz_match(syms, window=64)
+    np.testing.assert_array_equal(np.asarray(got_l), np.asarray(exp_l))
+    np.testing.assert_array_equal(np.asarray(got_o), np.asarray(exp_o))
+
+
+def test_kernel_grid_padding():
+    """nc not divisible by chunks_per_block."""
+    syms = _data(3, 128, 3, 1)
+    got_l, _ = kmod.lz_match_pallas(
+        syms, window=16, chunks_per_block=8, interpret=True
+    )
+    exp_l, _ = ref.lz_match(syms, window=16)
+    np.testing.assert_array_equal(np.asarray(got_l), np.asarray(exp_l))

@@ -1,0 +1,119 @@
+"""Core invariant: decompress(compress(x)) == x for ANY input, any config."""
+
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core import lzss
+
+
+def roundtrip(data: np.ndarray, cfg: lzss.LZSSConfig, decoder="parallel"):
+    res = lzss.compress(data, cfg)
+    out = lzss.decompress(res.data, decoder=decoder)
+    raw = np.ascontiguousarray(data).view(np.uint8).reshape(-1)
+    assert np.array_equal(out, raw), (
+        f"roundtrip failed: cfg={cfg} n={raw.size}"
+    )
+    return res
+
+
+@pytest.mark.parametrize("symbol_size", [1, 2, 4])
+@pytest.mark.parametrize("window", [8, 32, 255])
+def test_roundtrip_random(symbol_size, window):
+    rng = np.random.default_rng(symbol_size * 1000 + window)
+    data = rng.integers(0, 256, size=3000).astype(np.uint8)
+    cfg = lzss.LZSSConfig(symbol_size=symbol_size, window=window,
+                          chunk_symbols=256)
+    roundtrip(data, cfg)
+
+
+@pytest.mark.parametrize("symbol_size", [1, 2, 4])
+def test_roundtrip_compressible(symbol_size):
+    rng = np.random.default_rng(7)
+    base = np.repeat(rng.integers(0, 8, 500), rng.integers(1, 12, 500))
+    data = base.astype(np.uint16)
+    cfg = lzss.LZSSConfig(symbol_size=symbol_size, window=64,
+                          chunk_symbols=512)
+    res = roundtrip(data, cfg)
+    assert res.ratio > 1.5  # run-heavy data must compress
+
+
+def test_roundtrip_all_zeros():
+    cfg = lzss.LZSSConfig(symbol_size=2, window=128, chunk_symbols=1024)
+    res = roundtrip(np.zeros(10_000, np.uint8), cfg)
+    assert res.ratio > 20
+
+
+def test_roundtrip_empty_and_tiny():
+    cfg = lzss.LZSSConfig(symbol_size=2, window=32, chunk_symbols=256)
+    for n in (1, 2, 3, 5, 255, 256, 257):
+        roundtrip(np.arange(n, dtype=np.uint8), cfg)
+
+
+def test_roundtrip_unaligned_length():
+    # n not divisible by S: padding must be invisible after decompress
+    cfg = lzss.LZSSConfig(symbol_size=4, window=32, chunk_symbols=256)
+    roundtrip(np.arange(1003, dtype=np.int64).view(np.uint8)[:4001], cfg)
+
+
+def test_selector_variants_agree():
+    rng = np.random.default_rng(3)
+    data = np.repeat(rng.integers(0, 16, 1000), rng.integers(1, 6, 1000))
+    data = data.astype(np.uint16)
+    kw = dict(symbol_size=2, window=64, chunk_symbols=512)
+    a = lzss.compress(data, lzss.LZSSConfig(selector="scan", **kw))
+    b = lzss.compress(data, lzss.LZSSConfig(selector="doubling", **kw))
+    assert np.array_equal(a.data, b.data)
+
+
+def test_decoder_variants_agree():
+    rng = np.random.default_rng(4)
+    data = np.repeat(rng.integers(0, 16, 1000), rng.integers(1, 6, 1000))
+    data = data.astype(np.uint16)
+    cfg = lzss.LZSSConfig(symbol_size=2, window=64, chunk_symbols=512)
+    res = lzss.compress(data, cfg)
+    a = lzss.decompress(res.data, decoder="scan")
+    b = lzss.decompress(res.data, decoder="parallel")
+    assert np.array_equal(a, b)
+
+
+def test_pallas_matcher_matches_xla_end_to_end():
+    rng = np.random.default_rng(5)
+    data = np.repeat(rng.integers(0, 32, 800), rng.integers(1, 5, 800))
+    data = data.astype(np.uint16)[:2048]
+    kw = dict(symbol_size=2, window=32, chunk_symbols=256)
+    a = lzss.compress(data, lzss.LZSSConfig(matcher="xla", **kw))
+    b = lzss.compress(data, lzss.LZSSConfig(matcher="pallas", **kw))
+    assert np.array_equal(a.data, b.data)
+
+
+@given(
+    data=st.binary(min_size=0, max_size=2000),
+    symbol_size=st.sampled_from([1, 2, 4]),
+    window=st.sampled_from([4, 17, 64, 255]),
+)
+def test_roundtrip_property(data, symbol_size, window):
+    arr = np.frombuffer(data, np.uint8)
+    cfg = lzss.LZSSConfig(symbol_size=symbol_size, window=window,
+                          chunk_symbols=128)
+    roundtrip(arr, cfg)
+
+
+@given(st.lists(st.integers(0, 3), min_size=1, max_size=600))
+def test_roundtrip_low_entropy_property(vals):
+    arr = np.array(vals, np.uint8)
+    cfg = lzss.LZSSConfig(symbol_size=1, window=32, chunk_symbols=128)
+    roundtrip(arr, cfg)
+
+
+def test_ratio_accounting_exact():
+    """total_bytes must equal the container's real length."""
+    rng = np.random.default_rng(6)
+    data = rng.integers(0, 4, 5000).astype(np.uint8)
+    cfg = lzss.LZSSConfig(symbol_size=1, window=32, chunk_symbols=512)
+    res = lzss.compress(data, cfg)
+    assert res.data.size == res.total_bytes
+    from repro.core import format as fmt
+    h = fmt.parse_header(res.data)
+    assert h.total_bytes == res.total_bytes
+    assert h.orig_bytes == data.size

@@ -1,0 +1,63 @@
+"""Vectorized matcher vs brute-force oracle (+ properties of matches)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core import match
+
+
+@pytest.mark.parametrize(
+    "nc,c,w,vocab",
+    [(2, 64, 8, 4), (3, 128, 32, 3), (1, 96, 255, 2), (2, 200, 17, 10),
+     (1, 64, 1, 2)],
+)
+def test_matches_equal_bruteforce(nc, c, w, vocab):
+    rng = np.random.default_rng(nc * c + w)
+    syms = rng.integers(0, vocab, size=(nc, c)).astype(np.int32)
+    lengths, offsets = match.find_matches(syms, window=w)
+    ref_l, ref_o = match.find_matches_reference(syms, window=w)
+    np.testing.assert_array_equal(np.asarray(lengths), ref_l)
+    np.testing.assert_array_equal(np.asarray(offsets), ref_o)
+
+
+@given(
+    st.lists(st.integers(0, 2), min_size=8, max_size=96),
+    st.sampled_from([2, 7, 32]),
+)
+def test_match_invariants_property(vals, w):
+    syms = np.array(vals, np.int32)[None, :]
+    lengths, offsets = map(np.asarray, match.find_matches(syms, window=w))
+    c = syms.shape[1]
+    for i in range(c):
+        ln, off = lengths[0, i], offsets[0, i]
+        assert 0 <= ln <= min(w, 255)
+        if ln == 0:
+            assert off == 0
+            continue
+        assert 1 <= off <= min(i, w)
+        assert ln <= off          # paper §3.3.2: length never exceeds offset
+        assert i + ln <= c        # never crosses the chunk end
+        # the claimed match is real
+        np.testing.assert_array_equal(
+            syms[0, i : i + ln], syms[0, i - off : i - off + ln]
+        )
+
+
+def test_window_monotonicity():
+    """A larger window can only find equal-or-longer matches."""
+    rng = np.random.default_rng(0)
+    syms = rng.integers(0, 3, size=(2, 256)).astype(np.int32)
+    prev = None
+    for w in (4, 16, 64, 255):
+        lengths, _ = match.find_matches(syms, window=w)
+        lengths = np.asarray(lengths)
+        if prev is not None:
+            assert (lengths >= prev).all()
+        prev = lengths
+
+
+def test_capped_run_lengths():
+    eq = np.array([[1, 1, 1, 0, 1, 0, 1, 1]], np.int32)
+    r = np.asarray(match.capped_run_lengths(eq, levels=3))
+    np.testing.assert_array_equal(r, [[3, 2, 1, 0, 1, 0, 2, 1]])

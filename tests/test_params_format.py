@@ -1,0 +1,69 @@
+"""Parameter selector (paper §3.2.3) + container format invariants."""
+
+import numpy as np
+import pytest
+
+from repro.core import format as fmt, lzss
+from repro.core.params import ParamSelector, dtype_symbol_size, select_params
+
+
+def test_dtype_symbol_size():
+    assert dtype_symbol_size(np.uint16) == 2
+    assert dtype_symbol_size(np.float32) == 4
+    assert dtype_symbol_size(np.uint8) == 1
+    assert dtype_symbol_size(np.float64) == 4  # falls back to 4
+
+
+def test_selector_keeps_multibyte_on_compressible():
+    rng = np.random.default_rng(0)
+    data = np.repeat(rng.integers(0, 8, 2000), 8).astype(np.uint16)
+    sel = ParamSelector(dtype=np.uint16, level=3)
+    sel.observe(data)
+    assert sel.mean_ratio > 1.5
+    assert sel.current_config().symbol_size == 2  # stays multi-byte
+
+
+def test_selector_falls_back_to_bytes_on_noise():
+    rng = np.random.default_rng(1)
+    noise = rng.integers(0, 2**31, 4000).astype(np.int32)
+    sel = ParamSelector(dtype=np.int32, level=3)
+    sel.observe(noise)
+    assert sel.mean_ratio < 1.5
+    assert sel.current_config().symbol_size == 1  # paper's fallback rule
+
+
+def test_selector_window_levels():
+    cfg = select_params(np.zeros(4096, np.uint16), level=1)
+    assert cfg.window <= 64  # level 1 = fast
+    cfg4 = ParamSelector(dtype=np.uint16, level=4).current_config()
+    assert cfg4.window == 255
+
+
+def test_header_roundtrip_fields():
+    data = np.arange(5000, dtype=np.int64).view(np.uint8)[:9999]
+    cfg = lzss.LZSSConfig(symbol_size=2, window=77, chunk_symbols=256)
+    res = lzss.compress(data, cfg)
+    h = fmt.parse_header(res.data)
+    assert h.symbol_size == 2
+    assert h.window == 77
+    assert h.chunk_symbols == 256
+    assert h.orig_bytes == 9999
+    assert h.total_bytes == res.total_bytes
+    n_tok, pay = fmt.parse_tables(res.data, h)
+    assert n_tok.shape == (h.n_chunks,)
+    assert int(pay.sum()) == h.payload_bytes
+
+
+def test_bad_magic_rejected():
+    with pytest.raises(ValueError, match="magic"):
+        fmt.parse_header(np.zeros(64, np.uint8))
+
+
+def test_max_compressed_bytes_is_worst_case():
+    rng = np.random.default_rng(2)
+    data = rng.integers(0, 256, 10000).astype(np.uint8)  # incompressible
+    for s in (1, 2, 4):
+        cfg = lzss.LZSSConfig(symbol_size=s, window=255, chunk_symbols=256)
+        res = lzss.compress(data, cfg)
+        cap = fmt.max_compressed_bytes(data.size, s, 256)
+        assert res.total_bytes <= cap

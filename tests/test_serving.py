@@ -1,0 +1,43 @@
+"""Serving engine + KV block store."""
+
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import model as model_lib
+from repro.serving.engine import ServingEngine
+from repro.serving.kvcache import KVBlockStore, PagedKVTracker
+
+
+def test_generate_greedy_deterministic():
+    cfg = configs.reduced_config(configs.get_config("llama3.2-1b"))
+    params = model_lib.init_params(cfg, 0)
+    eng = ServingEngine(cfg, params, max_len=64)
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(0, cfg.vocab_size, (2, 8)).astype(np.int32)
+    r1 = eng.generate(prompts, max_new_tokens=8)
+    r2 = eng.generate(prompts, max_new_tokens=8)
+    np.testing.assert_array_equal(r1.tokens, r2.tokens)
+    # prompt region is teacher-forced
+    np.testing.assert_array_equal(r1.tokens[:, :8], prompts)
+
+
+def test_kv_store_roundtrip_compressed():
+    store = KVBlockStore(compress=True)
+    rng = np.random.default_rng(1)
+    block = (rng.normal(size=(64, 4, 16)) * 0.02).astype(np.float32)
+    block[8:16] = block[0:8]
+    store.evict(("s0", 0), block)
+    assert ("s0", 0) in store
+    out = store.restore(("s0", 0))
+    np.testing.assert_array_equal(out, block)
+    assert store.stats.evictions == 1 and store.stats.restores == 1
+
+
+def test_tracker_lru_eviction():
+    tr = PagedKVTracker(block_tokens=4, budget_blocks=2)
+    tr.touch(0, 0)
+    tr.touch(0, 4)
+    tr.touch(0, 8)
+    cands = tr.eviction_candidates()
+    assert cands == [(0, 0)]  # oldest block evicted first
