@@ -1,0 +1,20 @@
+# Tier-1 verification + common dev entry points.
+# `repro` is importable either via `pip install -e .` (pyproject.toml) or via
+# PYTHONPATH=src — the targets below use the latter so they work in the
+# offline CI container without an install step.
+
+PY ?= python
+
+.PHONY: test test-fast bench-pipeline bench
+
+test:
+	PYTHONPATH=src $(PY) -m pytest -x -q
+
+test-fast:
+	PYTHONPATH=src $(PY) -m pytest -x -q -m "not slow"
+
+bench-pipeline:
+	PYTHONPATH=src:. $(PY) benchmarks/fig9_throughput.py --backend fused
+
+bench:
+	PYTHONPATH=src:. $(PY) benchmarks/run.py

@@ -6,10 +6,19 @@ CPU-sequential path onto the accelerator.  We reproduce that *structure*:
 `culzss-workflow` = GPU(XLA) matching + host-python sequential encode (their
 Fig. 4a), vs `gpulz` = fully in-graph Kernel I-III (their Fig. 4d).  Both run
 on this container's CPU, so the RATIO of the two numbers is the
-reproduction; absolute GB/s for TPU comes from §Roofline."""
+reproduction; absolute GB/s for TPU comes from §Roofline.
+
+``--backend`` additionally sweeps the pipeline's Kernel-I backends (xla
+baseline vs fused Pallas Kernel I) and records both in BENCH_pipeline.json —
+the perf trajectory of the backend refactor (see EXPERIMENTS.md §Pipeline).
+On CPU the fused backend runs the kernel in interpret mode, so its absolute
+number is NOT meaningful off-TPU; the JSON tags the platform."""
 
 from __future__ import annotations
 
+import json
+
+import jax
 import numpy as np
 
 from benchmarks.common import emit, throughput_gbs, time_fn
@@ -47,7 +56,53 @@ def culzss_workflow_seconds(data: np.ndarray, window=128, c=2048) -> float:
     return time.perf_counter() - t0
 
 
-def run(nbytes: int = 1 << 20, dataset: str = "hurr-quant"):
+def backend_sweep(
+    data: np.ndarray,
+    backends=("xla", "fused"),
+    sweep_nbytes: int = 1 << 16,
+    out_json: str = "BENCH_pipeline.json",
+    dataset: str = "hurr-quant",
+) -> dict:
+    """Time each pipeline backend on the same corpus; write BENCH_pipeline.json.
+
+    Uses a smaller slice (``sweep_nbytes``) than the headline numbers: off-TPU
+    the fused backend interprets the Pallas kernel body, so large inputs are
+    prohibitively slow without telling us anything new.
+    """
+    slice_ = np.ascontiguousarray(data[:sweep_nbytes])
+    results = {}
+    for backend in backends:
+        cfg = lzss.LZSSConfig(
+            symbol_size=2, window=128, chunk_symbols=2048, backend=backend
+        )
+        t = time_fn(lambda: lzss.compress(slice_, cfg), warmup=1, iters=2)
+        gbs = throughput_gbs(slice_.nbytes, t)
+        emit(f"fig9/{dataset}/backend-{backend}", t, f"{gbs:.4f}")
+        results[backend] = {
+            "seconds_per_call": t,
+            "gb_per_s": gbs,
+            "nbytes": int(slice_.nbytes),
+        }
+    record = {
+        "benchmark": "fig9_backend_sweep",
+        "dataset": dataset,
+        "platform": jax.default_backend(),
+        "interpret_mode": jax.default_backend() != "tpu",
+        "backends": results,
+    }
+    if "xla" in results and "fused" in results:
+        record["fused_over_xla"] = (
+            results["xla"]["seconds_per_call"]
+            / max(results["fused"]["seconds_per_call"], 1e-12)
+        )
+    with open(out_json, "w") as f:
+        json.dump(record, f, indent=2)
+    print(f"# wrote {out_json}")
+    return record
+
+
+def run(nbytes: int = 1 << 20, dataset: str = "hurr-quant",
+        backend: str = "fused", sweep_nbytes: int = 1 << 16):
     print("# fig9: name,us_per_call,GB/s")
     data = datasets.load(dataset, nbytes)
 
@@ -68,6 +123,25 @@ def run(nbytes: int = 1 << 20, dataset: str = "hurr-quant"):
     emit(f"fig9/{dataset}/speedup-vs-culzss", 0.0,
          f"{t_culzss / t_gpulz:.1f}x|paper=22.2x-avg")
 
+    # pipeline backend sweep: always include the xla baseline so the JSON
+    # records both sides of the comparison
+    backends = ("xla",) if backend == "xla" else ("xla", backend)
+    backend_sweep(data, backends=backends, sweep_nbytes=sweep_nbytes,
+                  dataset=dataset)
+
 
 if __name__ == "__main__":
-    run()
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--nbytes", type=int, default=1 << 20)
+    ap.add_argument("--dataset", default="hurr-quant")
+    ap.add_argument("--backend", default="fused",
+                    choices=sorted(lzss.available_backends()),
+                    help="pipeline backend to sweep against the xla baseline")
+    ap.add_argument("--sweep-nbytes", type=int, default=1 << 16,
+                    help="corpus slice for the backend sweep (interpret mode "
+                         "makes fused slow off-TPU)")
+    args = ap.parse_args()
+    run(nbytes=args.nbytes, dataset=args.dataset, backend=args.backend,
+        sweep_nbytes=args.sweep_nbytes)

@@ -30,8 +30,10 @@ def main():
     # keys are strongly structured (rope bands + repeated prompt segments)
     base = rng.normal(0, 0.05, (16, 2, 16)).astype(np.float16)
     k_block = np.repeat(base, 16, axis=0)  # repeated-segment structure
-    for b in range(6):
-        engine.kv_store.evict(("seq0", b), k_block)
+    # one batched dispatch compresses the whole eviction round
+    engine.kv_store.evict_many(
+        [(("seq0", b), k_block) for b in range(6)]
+    )
     back = engine.kv_store.restore(("seq0", 0))
     assert np.array_equal(back, k_block)
     s = engine.kv_store.stats

@@ -181,6 +181,9 @@ class CompressionConfig:
     grad_cross_pod: bool = False     # quantize+LZSS the pod-axis grad exchange
     grad_ratio_cap: float = 2.0      # fixed buffer = quantized_size / cap
     kv_eviction: bool = False        # compress cold KV blocks on eviction
+    lz_backend: str = "auto"         # Kernel-I backend registry key
+                                     # (core/pipeline.py); "auto" = fused on
+                                     # TPU, unfused xla elsewhere
 
 
 @dataclasses.dataclass(frozen=True)

@@ -6,13 +6,23 @@ from repro.core.lzss import (
     DEFAULT_CONFIG,
     LZSSConfig,
     WINDOW_LEVELS,
+    BatchedCompressResult,
+    CompressorBackend,
     CompressResult,
+    available_backends,
     compress,
     compress_chunks,
+    compress_many,
+    compress_many_chunks,
     compression_ratio,
     decompress,
     decompress_chunks,
+    decompress_many,
+    decompress_many_chunks,
+    default_backend,
+    get_backend,
     pack_symbols,
+    register_backend,
     unpack_symbols,
 )
 from repro.core.match import find_matches
@@ -23,12 +33,22 @@ __all__ = [
     "DEFAULT_CONFIG",
     "LZSSConfig",
     "WINDOW_LEVELS",
+    "BatchedCompressResult",
+    "CompressorBackend",
     "CompressResult",
+    "available_backends",
     "compress",
     "compress_chunks",
+    "compress_many",
+    "compress_many_chunks",
     "compression_ratio",
     "decompress",
     "decompress_chunks",
+    "decompress_many",
+    "decompress_many_chunks",
+    "default_backend",
+    "get_backend",
+    "register_backend",
     "pack_symbols",
     "unpack_symbols",
     "find_matches",

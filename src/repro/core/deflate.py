@@ -20,8 +20,11 @@ import jax.numpy as jnp
 from jax import lax
 
 
-def pack_flags(emitted, use_match):
+def pack_flags(emitted, use_match, n_tokens=None):
     """Pack one flag bit per emitted token (1 = pointer, 0 = literal).
+
+    ``n_tokens`` (nc,) may be supplied when the backend already computed it
+    (the fused Kernel I does) to skip the reduction here.
 
     Returns:
       flag_bytes: (nc, C//8) int32 in [0,255] — bit t of the chunk's flag
@@ -39,7 +42,8 @@ def pack_flags(emitted, use_match):
         .at[rows, byte_idx]
         .add(bitval, mode="drop")
     )
-    n_tokens = jnp.sum(emitted.astype(jnp.int32), axis=1)
+    if n_tokens is None:
+        n_tokens = jnp.sum(emitted.astype(jnp.int32), axis=1)
     flag_sizes = (n_tokens + 7) // 8
     return flag_bytes, flag_sizes
 

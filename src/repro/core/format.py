@@ -153,3 +153,21 @@ def parse_tables(blob: np.ndarray, header: Header):
     a = blob[header.sec_a : header.sec_a + 4 * nc].view(np.uint32).copy()
     b = blob[header.sec_b : header.sec_b + 4 * nc].view(np.uint32).copy()
     return a.astype(np.int32), b.astype(np.int32)
+
+
+def parse_tables_jax(blob_i32, n_chunks: int):
+    """In-graph sections A/B parse (u32 little-endian).
+
+    ``blob_i32`` is a container as a flat int32 byte buffer (traced);
+    ``n_chunks`` must be static.  Used by consumers that decode containers
+    inside jit (gradient exchange, batched decompression).
+    """
+
+    def sec(base):
+        rows = blob_i32[base : base + 4 * n_chunks].reshape(n_chunks, 4)
+        return (
+            rows[:, 0] | (rows[:, 1] << 8) | (rows[:, 2] << 16)
+            | (rows[:, 3] << 24)
+        )
+
+    return sec(HEADER_BYTES), sec(HEADER_BYTES + 4 * n_chunks)

@@ -3,159 +3,40 @@
     matching -> local prefix sum -> encoding -> global prefix sum -> deflating
     `------------- Kernel I -------------'    `-- Kernel II --'   `Kernel III'
 
-``compress_chunks`` is the fully jittable core (fixed shapes, usable in-graph
-for gradient/KV compression); ``compress``/``decompress`` are host-facing
+Kernel-I execution is pluggable (core/pipeline.py): ``LZSSConfig(backend=...)``
+selects between the unfused XLA reference path and the fused Pallas kernel.
+``compress_chunks`` / ``compress_many_chunks`` are the fully jittable cores
+(fixed shapes, usable in-graph for gradient/KV compression); ``compress`` /
+``decompress`` and ``compress_many`` / ``decompress_many`` are host-facing
 wrappers handling padding, headers and dynamic sizes.
 """
 
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Literal
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import decode as decode_mod
-from repro.core import deflate, encode, format as fmt, match
+from repro.core import format as fmt
 
-
-@dataclasses.dataclass(frozen=True)
-class LZSSConfig:
-    """Paper parameters: S (symbol bytes), W (window), C (chunk symbols)."""
-
-    symbol_size: int = 2          # S in {1, 2, 4}
-    window: int = 128             # W in [1, 255]; levels 1-4 = 32/64/128/255
-    chunk_symbols: int = 2048     # C; VMEM-resident chunk
-    selector: Literal["scan", "doubling"] = "doubling"
-    matcher: Literal["xla", "pallas"] = "xla"
-    decoder: Literal["parallel", "scan"] = "parallel"
-
-    def __post_init__(self):
-        if self.symbol_size not in (1, 2, 4):
-            raise ValueError(f"symbol_size must be 1, 2 or 4: {self.symbol_size}")
-        if not 1 <= self.window <= 255:
-            raise ValueError(f"window must be in [1, 255]: {self.window}")
-        if self.chunk_symbols % 8:
-            raise ValueError("chunk_symbols must be a multiple of 8")
-
-    @property
-    def min_match(self) -> int:
-        return encode.min_match_length(self.symbol_size)
-
-
-DEFAULT_CONFIG = LZSSConfig()  # paper default: C=2048, S=2, W=128
-
-# window "levels" exposed to users (paper §3.2.3: level 1-4 trade ratio/speed)
-WINDOW_LEVELS = {1: 32, 2: 64, 3: 128, 4: 255}
-
-
-def pack_symbols(data: jnp.ndarray, symbol_size: int) -> jnp.ndarray:
-    """(n_bytes,) uint8 -> (n_sym,) int32 little-endian symbols (n_bytes % S == 0)."""
-    d = data.reshape(-1, symbol_size).astype(jnp.int32)
-    sym = d[:, 0]
-    for b in range(1, symbol_size):
-        sym = sym | (d[:, b] << (8 * b))
-    return sym
-
-
-def unpack_symbols(symbols: jnp.ndarray, symbol_size: int) -> jnp.ndarray:
-    """(n_sym,) int32 -> (n_sym * S,) uint8 little-endian."""
-    cols = [((symbols >> (8 * b)) & 0xFF) for b in range(symbol_size)]
-    return jnp.stack(cols, axis=-1).reshape(-1).astype(jnp.uint8)
-
-
-def _find_matches(symbols, cfg: LZSSConfig):
-    if cfg.matcher == "pallas":
-        from repro.kernels import ops  # lazy: kernels are optional at import
-
-        return ops.lz_match(symbols, window=cfg.window)
-    return match.find_matches(symbols, window=cfg.window)
-
-
-def _select(lengths, cfg: LZSSConfig):
-    fn = (
-        encode.select_tokens_doubling
-        if cfg.selector == "doubling"
-        else encode.select_tokens_scan
-    )
-    return fn(lengths, min_match=cfg.min_match)
-
-
-@functools.partial(jax.jit, static_argnames=("cfg",))
-def compress_chunks(symbols: jnp.ndarray, cfg: LZSSConfig):
-    """Jittable core: (nc, C) int32 symbols -> (buffer u8[cap], total_bytes).
-
-    The buffer holds a complete container (header + tables + flags + payload);
-    bytes past ``total_bytes`` are zero.
-    """
-    nc, c = symbols.shape
-    s = cfg.symbol_size
-    lengths, offsets = _find_matches(symbols, cfg)
-    emitted = _select(lengths, cfg)
-    fields = encode.token_fields(
-        lengths, emitted, min_match=cfg.min_match, symbol_size=s
-    )
-    flag_bytes, flag_sizes = deflate.pack_flags(emitted, fields["use_match"])
-    payload = deflate.build_chunk_payloads(
-        symbols, lengths, offsets, fields, symbol_size=s
-    )
-    pay_off, pay_total, flag_off, flag_total = deflate.global_offsets(
-        fields["payload_sizes"], flag_sizes
-    )
-    cap = fmt.max_compressed_bytes(nc * c * s, s, c)
-    out = jnp.zeros((cap,), jnp.int32)
-    out = fmt.write_header_and_tables(
-        out,
-        symbol_size=s,
-        window=cfg.window,
-        chunk_symbols=c,
-        n_chunks=nc,
-        orig_bytes=nc * c * s,
-        payload_total=pay_total,
-        flag_total=flag_total,
-        n_tokens=fields["n_tokens"],
-        payload_sizes=fields["payload_sizes"],
-    )
-    sec_flags = fmt.HEADER_BYTES + 8 * nc
-    out = deflate.scatter_section(out, sec_flags, flag_bytes, flag_sizes, flag_off)
-    out = deflate.scatter_section(
-        out, sec_flags + flag_total, payload, fields["payload_sizes"], pay_off
-    )
-    total = sec_flags + flag_total + pay_total
-    return out.astype(jnp.uint8), total
-
-
-@functools.partial(
-    jax.jit, static_argnames=("symbol_size", "chunk_symbols", "n_chunks", "decoder")
+# The jittable pipeline layer; re-exported so existing imports keep working.
+from repro.core.pipeline import (  # noqa: F401
+    DEFAULT_CONFIG,
+    WINDOW_LEVELS,
+    CompressorBackend,
+    LZSSConfig,
+    available_backends,
+    compress_chunks,
+    compress_many_chunks,
+    decompress_chunks,
+    decompress_many_chunks,
+    default_backend,
+    get_backend,
+    pack_symbols,
+    register_backend,
+    unpack_symbols,
 )
-def decompress_chunks(
-    blob, n_tokens, payload_sizes, *, symbol_size, chunk_symbols, n_chunks, decoder
-):
-    """Jittable core: container bytes -> (nc, C) int32 symbols."""
-    c, s, nc = chunk_symbols, symbol_size, n_chunks
-    blob = blob.astype(jnp.int32)
-    flag_sizes = (n_tokens + 7) // 8
-    fcsum = jnp.cumsum(flag_sizes)
-    pcsum = jnp.cumsum(payload_sizes)
-    flag_off = fcsum - flag_sizes
-    pay_off = pcsum - payload_sizes
-    sec_flags = fmt.HEADER_BYTES + 8 * nc
-    flag_bytes = deflate.gather_section(
-        blob, sec_flags, flag_sizes, flag_off, (c + 7) // 8
-    )
-    payload = deflate.gather_section(
-        blob, sec_flags + fcsum[-1], payload_sizes, pay_off, c * s
-    )
-    fn = (
-        decode_mod.decode_parallel
-        if decoder == "parallel"
-        else decode_mod.decode_scan
-    )
-    return fn(flag_bytes, payload, n_tokens, symbol_size=s)
-
 
 # ---------------------------------------------------------------- host API
 
@@ -171,21 +52,43 @@ class CompressResult:
         return self.orig_bytes / max(1, self.total_bytes)
 
 
+_DISPATCH_QUANTUM = 4096  # decompress shape-bucketing granularity (bytes)
+
+
+def _dispatch_capacity(n_bytes: int) -> int:
+    """Round a container size up to the next dispatch bucket.
+
+    The decompression gathers are bounds-checked (clipped + masked), so the
+    dispatch buffer only needs to cover the blob itself; rounding to a coarse
+    quantum bounds jit-cache growth across blob sizes.  Crucially this is
+    linear in the blob size — small blobs are NOT padded to the worst-case
+    ``max_compressed_bytes`` capacity of their (possibly huge) chunk geometry.
+    """
+    return -(-max(n_bytes, 1) // _DISPATCH_QUANTUM) * _DISPATCH_QUANTUM
+
+
+def _pack_padded(raw: np.ndarray, nc: int, cfg: LZSSConfig) -> jnp.ndarray:
+    """(n,) uint8 host bytes -> (nc, C) int32 symbols, zero-padded."""
+    s, c = cfg.symbol_size, cfg.chunk_symbols
+    padded = np.zeros(nc * c * s, np.uint8)
+    padded[: raw.size] = raw
+    return pack_symbols(jnp.asarray(padded), s).reshape(nc, c)
+
+
+def _as_bytes(data) -> np.ndarray:
+    return np.ascontiguousarray(data).view(np.uint8).reshape(-1)
+
+
 def compress(data, config: LZSSConfig = DEFAULT_CONFIG) -> CompressResult:
     """Compress any array/bytes. Pads to whole chunks; header records truth."""
-    raw = np.ascontiguousarray(data).view(np.uint8).reshape(-1)
+    raw = _as_bytes(data)
     n = raw.size
     s, c = config.symbol_size, config.chunk_symbols
     nsym = -(-max(n, 1) // s)
     nc = -(-nsym // c)
-    padded = np.zeros(nc * c * s, np.uint8)
-    padded[:n] = raw
-    symbols = pack_symbols(jnp.asarray(padded), s).reshape(nc, c)
-    buf, total = compress_chunks(symbols, config)
-    buf = np.array(buf)  # writable host copy
-    total = int(total)
-    # patch true orig_bytes into the header (host-side, cheap)
-    buf[16:24] = np.frombuffer(int(n).to_bytes(8, "little"), np.uint8)
+    symbols = _pack_padded(raw, nc, config)
+    buf, total = compress_chunks(symbols, config, jnp.int32(n))
+    buf, total = np.asarray(buf), int(total)
     return CompressResult(data=buf[:total], orig_bytes=n, total_bytes=total)
 
 
@@ -194,10 +97,7 @@ def decompress(blob, decoder: str = "parallel") -> np.ndarray:
     blob = np.asarray(blob, np.uint8)
     h = fmt.parse_header(blob)
     n_tokens, payload_sizes = fmt.parse_tables(blob, h)
-    cap = fmt.max_compressed_bytes(
-        h.n_chunks * h.chunk_symbols * h.symbol_size, h.symbol_size, h.chunk_symbols
-    )
-    full = np.zeros(cap, np.uint8)
+    full = np.zeros(_dispatch_capacity(blob.size), np.uint8)
     full[: blob.size] = blob
     symbols = decompress_chunks(
         jnp.asarray(full),
@@ -214,3 +114,115 @@ def decompress(blob, decoder: str = "parallel") -> np.ndarray:
 
 def compression_ratio(data, config: LZSSConfig = DEFAULT_CONFIG) -> float:
     return compress(data, config).ratio
+
+
+# ------------------------------------------------------------ batched API
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchedCompressResult:
+    """B containers compressed in one dispatch.
+
+    ``data`` is the stacked (B, cap) uint8 buffer; row ``b`` holds a complete
+    container in its first ``total_bytes[b]`` bytes (zeros beyond).
+    """
+
+    data: np.ndarray          # (B, cap) uint8
+    orig_bytes: np.ndarray    # (B,) int64
+    total_bytes: np.ndarray   # (B,) int64
+    config: LZSSConfig
+
+    def __len__(self) -> int:
+        return self.data.shape[0]
+
+    def __getitem__(self, b: int) -> CompressResult:
+        return CompressResult(
+            data=self.data[b, : self.total_bytes[b]],
+            orig_bytes=int(self.orig_bytes[b]),
+            total_bytes=int(self.total_bytes[b]),
+        )
+
+    @property
+    def ratio(self) -> float:
+        return int(self.orig_bytes.sum()) / max(1, int(self.total_bytes.sum()))
+
+
+def compress_many(
+    arrays, config: LZSSConfig = DEFAULT_CONFIG
+) -> BatchedCompressResult:
+    """Compress a batch of buffers in ONE jitted dispatch.
+
+    ``arrays`` is either a list of array-likes (ragged sizes allowed — every
+    buffer is padded to the batch's common chunk count, headers record true
+    sizes) or a (B, n) array treated as B equal-size buffers.  This is the
+    entry point the serving / checkpoint / gradient consumers use instead of
+    per-array ``compress()`` loops.
+    """
+    if isinstance(arrays, np.ndarray) and arrays.ndim == 2:
+        raws = [_as_bytes(arrays[i]) for i in range(arrays.shape[0])]
+    else:
+        raws = [_as_bytes(a) for a in arrays]
+    if not raws:
+        raise ValueError("compress_many needs at least one buffer")
+    s, c = config.symbol_size, config.chunk_symbols
+    sizes = np.array([r.size for r in raws], np.int64)
+    nsym_max = -(-max(1, int(sizes.max())) // s)
+    nc = -(-nsym_max // c)
+    symbols = jnp.stack([_pack_padded(r, nc, config) for r in raws])
+    data, totals = compress_many_chunks(
+        symbols, config, jnp.asarray(sizes, jnp.int32)
+    )
+    return BatchedCompressResult(
+        data=np.asarray(data),
+        orig_bytes=sizes,
+        total_bytes=np.asarray(totals, np.int64),
+        config=config,
+    )
+
+
+def decompress_many(batch, decoder: str = "parallel") -> list:
+    """Decompress a batch of containers in ONE jitted dispatch.
+
+    ``batch`` is a ``BatchedCompressResult`` or a list of container blobs.
+    All containers must share the same geometry (S, C, n_chunks) — true for
+    anything produced by ``compress_many``.  Returns a list of uint8 arrays.
+    """
+    if isinstance(batch, BatchedCompressResult):
+        # slice rows to their live bytes: the stacked buffer is worst-case
+        # wide, and the dispatch width below must track actual sizes
+        blobs = [
+            batch.data[b, : int(batch.total_bytes[b])]
+            for b in range(len(batch))
+        ]
+    else:
+        blobs = [np.asarray(b, np.uint8) for b in batch]
+    headers = [fmt.parse_header(b) for b in blobs]
+    h0 = headers[0]
+    for h in headers[1:]:
+        if (h.symbol_size, h.chunk_symbols, h.n_chunks) != (
+            h0.symbol_size, h0.chunk_symbols, h0.n_chunks
+        ):
+            raise ValueError(
+                "decompress_many requires a homogeneous batch geometry; "
+                "decompress mismatched containers individually"
+            )
+    tables = [fmt.parse_tables(b, h) for b, h in zip(blobs, headers)]
+    width = _dispatch_capacity(max(b.size for b in blobs))
+    stacked = np.zeros((len(blobs), width), np.uint8)
+    for i, b in enumerate(blobs):
+        stacked[i, : b.size] = b
+    symbols = decompress_many_chunks(
+        jnp.asarray(stacked),
+        jnp.asarray(np.stack([t[0] for t in tables])),
+        jnp.asarray(np.stack([t[1] for t in tables])),
+        symbol_size=h0.symbol_size,
+        chunk_symbols=h0.chunk_symbols,
+        n_chunks=h0.n_chunks,
+        decoder=decoder,
+    )
+    s = h0.symbol_size
+    flat = np.asarray(symbols).reshape(len(blobs), -1)
+    out_bytes = np.stack(
+        [(flat >> (8 * k)) & 0xFF for k in range(s)], axis=-1
+    ).astype(np.uint8).reshape(len(blobs), -1)
+    return [out_bytes[i, : h.orig_bytes] for i, h in enumerate(headers)]

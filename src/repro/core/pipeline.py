@@ -1,0 +1,375 @@
+"""Pluggable compression pipeline backends.
+
+The paper's pipeline is
+
+    matching -> local prefix sum -> encoding -> global prefix sum -> deflating
+    `------------- Kernel I -------------'    `-- Kernel II --'   `Kernel III'
+
+Kernel I is the part with real implementation freedom (their Fig. 4(c) vs
+(d)): it can be staged through HBM as separate XLA ops, or fused so the
+equality rows, run lengths, selection walk and local prefix sum never leave
+VMEM.  This module makes that choice a *backend*:
+
+  * ``CompressorBackend`` — the Kernel-I contract: ``kernel1(symbols, cfg)``
+    returns every per-position / per-chunk array the shared Kernel-II/III
+    tail needs (see ``Kernel1Result``).
+  * a registry (``register_backend`` / ``get_backend``) so new execution
+    strategies plug in without touching the pipeline tail — this is the
+    extension point for future PRs (see ROADMAP.md).
+  * ``compress_chunks`` / ``decompress_chunks`` — the jittable single-buffer
+    cores, now dispatching Kernel I through the configured backend.
+  * ``compress_many_chunks`` / ``decompress_many_chunks`` — the batched
+    in-graph API: one dispatch compresses B independent buffers (vmap over
+    the backend + tail), which is what the gradient/KV/checkpoint consumers
+    need instead of per-array host loops.
+
+Registered backends:
+
+  ``xla``          unfused reference path (workflow (c)): XLA matching, the
+                   beyond-paper pointer-doubling selector, XLA prefix sums.
+  ``xla-scan``     same but with the paper-faithful sequential selection walk
+                   (lax.scan) — the equivalence oracle.
+  ``pallas-match`` Pallas matching kernel, XLA select + prefix sums (the old
+                   ``matcher="pallas"`` switch).
+  ``fused``        the paper's headline configuration (workflow (d)): the
+                   fused Pallas Kernel I (kernels/lz_match.py) produces
+                   lengths/offsets/emitted/local_off/payload_sizes/n_tokens
+                   in one VMEM-resident kernel; the redundant XLA selection
+                   and local prefix sum are skipped entirely.
+
+On TPU ``fused`` is the default hot path; elsewhere the kernels execute in
+interpret mode, so the default stays ``xla`` (identical bytes, no interpreter
+overhead).  All backends produce byte-identical containers — property- and
+sweep-tested in tests/test_pipeline.py.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, Literal, Protocol
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import decode as decode_mod
+from repro.core import deflate, encode, format as fmt, match
+
+# --------------------------------------------------------------- config
+
+
+def default_backend() -> str:
+    """The preferred backend for the current accelerator."""
+    return "fused" if jax.default_backend() == "tpu" else "xla"
+
+
+@dataclasses.dataclass(frozen=True)
+class LZSSConfig:
+    """Paper parameters: S (symbol bytes), W (window), C (chunk symbols).
+
+    ``backend`` selects the Kernel-I execution strategy (see module
+    docstring); ``decoder`` selects the decompression strategy.
+    """
+
+    symbol_size: int = 2          # S in {1, 2, 4}
+    window: int = 128             # W in [1, 255]; levels 1-4 = 32/64/128/255
+    chunk_symbols: int = 2048     # C; VMEM-resident chunk
+    backend: str = "xla"          # registry key, see available_backends()
+    decoder: Literal["parallel", "scan"] = "parallel"
+
+    def __post_init__(self):
+        if self.symbol_size not in (1, 2, 4):
+            raise ValueError(f"symbol_size must be 1, 2 or 4: {self.symbol_size}")
+        if not 1 <= self.window <= 255:
+            raise ValueError(f"window must be in [1, 255]: {self.window}")
+        if self.chunk_symbols % 8:
+            raise ValueError("chunk_symbols must be a multiple of 8")
+        if self.backend not in _BACKENDS:
+            raise ValueError(
+                f"unknown backend {self.backend!r}; "
+                f"registered: {available_backends()}"
+            )
+
+    @property
+    def min_match(self) -> int:
+        return encode.min_match_length(self.symbol_size)
+
+
+# ------------------------------------------------------------- backends
+
+
+class CompressorBackend(Protocol):
+    """Kernel-I contract: match + select + local prefix sum for all chunks.
+
+    ``kernel1`` maps (nc, C) int32 symbols to a dict (``Kernel1Result``):
+
+      lengths, offsets   (nc, C) int32  best match per position
+      emitted            (nc, C) bool   token emitted at this position
+      use_match          (nc, C) bool   emitted token is a pointer
+      sizes              (nc, C) int32  encoded bytes at this position
+      local_off          (nc, C) int32  exclusive prefix sum of sizes
+      payload_sizes      (nc,)   int32  compressed payload bytes per chunk
+      n_tokens           (nc,)   int32  tokens per chunk (= flag bits)
+    """
+
+    name: str
+
+    def kernel1(self, symbols: jnp.ndarray, cfg: LZSSConfig) -> dict: ...
+
+
+Kernel1Result = Dict[str, jnp.ndarray]
+
+_BACKENDS: Dict[str, CompressorBackend] = {}
+
+
+def register_backend(backend: CompressorBackend) -> CompressorBackend:
+    """Register a backend instance under ``backend.name`` (latest wins).
+
+    Caveat: ``compress_chunks`` jit-caches on the config (which carries only
+    the backend *name*), so re-registering an existing name does not
+    invalidate already-traced calls — call ``jax.clear_caches()`` after
+    replacing a backend in place, or register under a fresh name.
+    """
+    _BACKENDS[backend.name] = backend
+    return backend
+
+
+def get_backend(name: str) -> CompressorBackend:
+    try:
+        return _BACKENDS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown backend {name!r}; registered: {available_backends()}"
+        ) from None
+
+
+def available_backends() -> list:
+    return sorted(_BACKENDS)
+
+
+def _derive_fields(lengths, emitted, use_match, *, symbol_size):
+    """The per-position byte sizes implied by a selection."""
+    return jnp.where(
+        emitted, jnp.where(use_match, 2, symbol_size), 0
+    ).astype(jnp.int32)
+
+
+class _XlaBackendBase:
+    """Unfused XLA path: matching, selection and prefix sums as separate ops
+    staged through HBM — the paper's workflow-(c) baseline."""
+
+    selector = staticmethod(encode.select_tokens_doubling)
+
+    def _matches(self, symbols, cfg):
+        return match.find_matches(symbols, window=cfg.window)
+
+    def kernel1(self, symbols, cfg):
+        lengths, offsets = self._matches(symbols, cfg)
+        emitted = self.selector(lengths, min_match=cfg.min_match)
+        fields = encode.token_fields(
+            lengths, emitted, min_match=cfg.min_match,
+            symbol_size=cfg.symbol_size,
+        )
+        return dict(lengths=lengths, offsets=offsets, emitted=emitted, **fields)
+
+
+@register_backend
+class XlaBackend(_XlaBackendBase):
+    name = "xla"
+
+
+@register_backend
+class XlaScanBackend(_XlaBackendBase):
+    """Paper-faithful sequential selection walk (equivalence oracle)."""
+
+    name = "xla-scan"
+    selector = staticmethod(encode.select_tokens_scan)
+
+
+@register_backend
+class PallasMatchBackend(_XlaBackendBase):
+    """Pallas matching kernel + unfused XLA select/prefix sums."""
+
+    name = "pallas-match"
+
+    def _matches(self, symbols, cfg):
+        from repro.kernels import ops  # lazy: kernels are optional at import
+
+        return ops.lz_match(symbols, window=cfg.window)
+
+
+@register_backend
+class FusedBackend:
+    """Fused Pallas Kernel I (workflow (d)): selection and the local prefix
+    sum stay in VMEM with the match intermediates; only the final token
+    metadata is written back.  Skips ``encode.select_tokens_*`` and the
+    cumsum in ``encode.token_fields`` entirely."""
+
+    name = "fused"
+
+    def kernel1(self, symbols, cfg):
+        from repro.kernels import ops  # lazy: kernels are optional at import
+
+        out = ops.lz_kernel1(
+            symbols,
+            window=cfg.window,
+            min_match=cfg.min_match,
+            symbol_size=cfg.symbol_size,
+        )
+        use_match = out["emitted"] & (out["lengths"] >= cfg.min_match)
+        sizes = _derive_fields(
+            out["lengths"], out["emitted"], use_match,
+            symbol_size=cfg.symbol_size,
+        )
+        return dict(out, use_match=use_match, sizes=sizes)
+
+
+# Instantiate the classes the decorator registered (register_backend stored
+# the class; the registry should hold callable instances).
+for _name, _b in list(_BACKENDS.items()):
+    if isinstance(_b, type):
+        _BACKENDS[_name] = _b()
+del _name, _b
+
+
+# ------------------------------------------------------- symbol packing
+
+
+def pack_symbols(data: jnp.ndarray, symbol_size: int) -> jnp.ndarray:
+    """(n_bytes,) uint8 -> (n_sym,) int32 little-endian symbols (n_bytes % S == 0)."""
+    d = data.reshape(-1, symbol_size).astype(jnp.int32)
+    sym = d[:, 0]
+    for b in range(1, symbol_size):
+        sym = sym | (d[:, b] << (8 * b))
+    return sym
+
+
+def unpack_symbols(symbols: jnp.ndarray, symbol_size: int) -> jnp.ndarray:
+    """(n_sym,) int32 -> (n_sym * S,) uint8 little-endian."""
+    cols = [((symbols >> (8 * b)) & 0xFF) for b in range(symbol_size)]
+    return jnp.stack(cols, axis=-1).reshape(-1).astype(jnp.uint8)
+
+
+# ------------------------------------------------------- jittable cores
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def compress_chunks(symbols: jnp.ndarray, cfg: LZSSConfig, orig_bytes=None):
+    """Jittable core: (nc, C) int32 symbols -> (buffer u8[cap], total_bytes).
+
+    The buffer holds a complete container (header + tables + flags + payload);
+    bytes past ``total_bytes`` are zero.  ``orig_bytes`` (scalar, may be
+    traced) is the true pre-padding byte count recorded in the header; when
+    omitted the padded size ``nc * C * S`` is recorded.
+    """
+    nc, c = symbols.shape
+    s = cfg.symbol_size
+    k1 = get_backend(cfg.backend).kernel1(symbols, cfg)
+    flag_bytes, flag_sizes = deflate.pack_flags(
+        k1["emitted"], k1["use_match"], n_tokens=k1["n_tokens"]
+    )
+    payload = deflate.build_chunk_payloads(
+        symbols, k1["lengths"], k1["offsets"], k1, symbol_size=s
+    )
+    pay_off, pay_total, flag_off, flag_total = deflate.global_offsets(
+        k1["payload_sizes"], flag_sizes
+    )
+    cap = fmt.max_compressed_bytes(nc * c * s, s, c)
+    out = jnp.zeros((cap,), jnp.int32)
+    out = fmt.write_header_and_tables(
+        out,
+        symbol_size=s,
+        window=cfg.window,
+        chunk_symbols=c,
+        n_chunks=nc,
+        orig_bytes=nc * c * s if orig_bytes is None else orig_bytes,
+        payload_total=pay_total,
+        flag_total=flag_total,
+        n_tokens=k1["n_tokens"],
+        payload_sizes=k1["payload_sizes"],
+    )
+    sec_flags = fmt.HEADER_BYTES + 8 * nc
+    out = deflate.scatter_section(out, sec_flags, flag_bytes, flag_sizes, flag_off)
+    out = deflate.scatter_section(
+        out, sec_flags + flag_total, payload, k1["payload_sizes"], pay_off
+    )
+    total = sec_flags + flag_total + pay_total
+    return out.astype(jnp.uint8), total
+
+
+@functools.partial(
+    jax.jit, static_argnames=("symbol_size", "chunk_symbols", "n_chunks", "decoder")
+)
+def decompress_chunks(
+    blob, n_tokens, payload_sizes, *, symbol_size, chunk_symbols, n_chunks, decoder
+):
+    """Jittable core: container bytes -> (nc, C) int32 symbols.
+
+    ``blob`` may be any buffer that covers the container's live bytes — the
+    section gathers are bounds-checked (clipped + masked), so no worst-case
+    zero padding is required.
+    """
+    c, s, nc = chunk_symbols, symbol_size, n_chunks
+    blob = blob.astype(jnp.int32)
+    flag_sizes = (n_tokens + 7) // 8
+    fcsum = jnp.cumsum(flag_sizes)
+    pcsum = jnp.cumsum(payload_sizes)
+    flag_off = fcsum - flag_sizes
+    pay_off = pcsum - payload_sizes
+    sec_flags = fmt.HEADER_BYTES + 8 * nc
+    flag_bytes = deflate.gather_section(
+        blob, sec_flags, flag_sizes, flag_off, (c + 7) // 8
+    )
+    payload = deflate.gather_section(
+        blob, sec_flags + fcsum[-1], payload_sizes, pay_off, c * s
+    )
+    fn = (
+        decode_mod.decode_parallel
+        if decoder == "parallel"
+        else decode_mod.decode_scan
+    )
+    return fn(flag_bytes, payload, n_tokens, symbol_size=s)
+
+
+# --------------------------------------------------------- batched cores
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def compress_many_chunks(symbols: jnp.ndarray, cfg: LZSSConfig, orig_bytes=None):
+    """Batched in-graph compression: (B, nc, C) -> ((B, cap) u8, (B,) totals).
+
+    One dispatch compresses B independent buffers; Kernel I runs for all
+    B * nc chunks at once (the backend sees a vmapped batch), which is the
+    paper's many-buffer scenario (cf. Sitaridi et al.'s massively-parallel
+    batch decompression).  ``orig_bytes`` is an optional (B,) int32 vector of
+    true per-buffer byte counts for the headers.
+    """
+    if orig_bytes is None:
+        b, nc, c = symbols.shape
+        orig_bytes = jnp.full((b,), nc * c * cfg.symbol_size, jnp.int32)
+    return jax.vmap(lambda s_, o_: compress_chunks(s_, cfg, o_))(
+        symbols, orig_bytes
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("symbol_size", "chunk_symbols", "n_chunks", "decoder")
+)
+def decompress_many_chunks(
+    blobs, n_tokens, payload_sizes, *, symbol_size, chunk_symbols, n_chunks,
+    decoder="parallel",
+):
+    """Batched inverse: (B, L) blobs + (B, nc) tables -> (B, nc, C) symbols."""
+    return jax.vmap(
+        lambda b_, t_, p_: decompress_chunks(
+            b_, t_, p_,
+            symbol_size=symbol_size, chunk_symbols=chunk_symbols,
+            n_chunks=n_chunks, decoder=decoder,
+        )
+    )(blobs, n_tokens, payload_sizes)
+
+
+DEFAULT_CONFIG = LZSSConfig()  # paper default: C=2048, S=2, W=128
+
+# window "levels" exposed to users (paper §3.2.3: level 1-4 trade ratio/speed)
+WINDOW_LEVELS = {1: 32, 2: 64, 3: 128, 4: 255}

@@ -1,8 +1,9 @@
 """Jitted public wrappers for the Pallas kernels.
 
 On non-TPU backends the kernels run in interpret mode (Python execution of the
-kernel body) so the whole framework — including `LZSSConfig(matcher="pallas")`
-— is testable on CPU.  On TPU they compile via Mosaic.
+kernel body) so the whole framework — including the `pallas-match` and `fused`
+pipeline backends (core/pipeline.py) — is testable on CPU.  On TPU they
+compile via Mosaic.
 """
 
 from __future__ import annotations

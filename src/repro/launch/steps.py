@@ -13,12 +13,14 @@ These are the objects the dry-run lowers and the launcher executes:
 
 from __future__ import annotations
 
+import dataclasses
 import functools
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.core import pipeline
 from repro.models import model as model_lib, transformer
 from repro.optim import adamw, grad_compress
 from repro.sharding import rules
@@ -131,6 +133,10 @@ def train_step_compressed(state, batch, *, cfg, traincfg, mesh):
     def pod_grads(mb):
         return _grads_and_metrics(state["params"], cfg, traincfg, mb)
 
+    lz_backend = traincfg.compression.lz_backend
+    if lz_backend == "auto":
+        lz_backend = pipeline.default_backend()
+    lz_cfg = dataclasses.replace(grad_compress.GRAD_LZ, backend=lz_backend)
     batch_pods = jax.tree.map(
         lambda x: x.reshape(n_pods, x.shape[0] // n_pods, *x.shape[1:]), batch
     )
@@ -147,6 +153,7 @@ def train_step_compressed(state, batch, *, cfg, traincfg, mesh):
     grads = grad_compress.pod_exchange_compressed(
         grad_stack, mesh,
         compress=traincfg.compression.grad_cross_pod,
+        cfg=lz_cfg,
         ratio_cap=traincfg.compression.grad_ratio_cap,
     )
     new_p, new_opt, opt_metrics = adamw.adamw_update(

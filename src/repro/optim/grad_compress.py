@@ -7,10 +7,11 @@ pods, each leaf is:
 
   1. quantized to uint16 codes with a per-leaf symmetric scale
      (+ optional error-feedback accumulator),
-  2. GPULZ-compressed in-graph (``compress_chunks`` — symbols ARE the codes,
-     S=2), into a buffer **capped at the raw-int16 size** so the exchange is
-     never worse than 2 bytes/element (2x smaller than bf16+fp32-master
-     exchanges, more when the codes compress),
+  2. GPULZ-compressed in-graph through the pipeline's batched entry point
+     (``pipeline.compress_many_chunks`` — all slabs in one dispatch, symbols
+     ARE the codes, S=2), into a buffer **capped at the raw-int16 size** so
+     the exchange is never worse than 2 bytes/element (2x smaller than
+     bf16+fp32-master exchanges, more when the codes compress),
   3. exchanged over the pod axis with ``lax.ppermute`` (ring for >2 pods),
   4. decoded in-graph (tables parsed straight from the received blob) and
      averaged.
@@ -29,11 +30,11 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.core import format as fmt
-from repro.core.lzss import LZSSConfig, compress_chunks, decompress_chunks
+from repro.core import format as fmt, pipeline
+from repro.core.pipeline import LZSSConfig
 
 GRAD_LZ = LZSSConfig(symbol_size=2, window=32, chunk_symbols=2048,
-                     selector="doubling", decoder="parallel")
+                     decoder="parallel")
 MIN_COMPRESS_SIZE = 65_536  # leaves below this exchange raw (graph economy)
 
 
@@ -56,18 +57,6 @@ def _pad_to_chunks(codes_flat, c):
     return jnp.pad(codes_flat, (0, pad)), nc
 
 
-def _parse_tables(blob_i32, nc):
-    """In-graph section A/B parse (u32 little-endian)."""
-    def sec(base):
-        rows = blob_i32[base : base + 4 * nc].reshape(nc, 4)
-        return (
-            rows[:, 0] | (rows[:, 1] << 8) | (rows[:, 2] << 16)
-            | (rows[:, 3] << 24)
-        )
-
-    return sec(fmt.HEADER_BYTES), sec(fmt.HEADER_BYTES + 4 * nc)
-
-
 SLAB_SYMBOLS = 1 << 24  # 16M symbols (32 MB) per slab: int32-offset safe,
                         # and slabs compress in parallel (vmap)
 
@@ -85,50 +74,58 @@ def _cap_bytes(slab: int, ratio_cap: float) -> int:
     return max(slab, int(slab * 2 / max(ratio_cap, 1.0)))
 
 
-def _compress_slab(padded_slab, cfg, ratio_cap):
-    """(slab,) int32 codes -> (payload u8[cap], used_lz).
+def _compress_slabs(padded, cfg, ratio_cap):
+    """(n_slabs, slab) int32 codes -> ((n_slabs, cap) u8 payloads, used_lz).
 
-    Budget = 2/ratio_cap bytes/element.  If the LZSS container fits, the
-    exchange is lossless w.r.t. the uint16 codes; otherwise the slab degrades
-    to the codes' high bytes (int8 precision — error feedback recommended,
-    see CompressionConfig).
+    One batched pipeline dispatch compresses every slab.  Budget =
+    2/ratio_cap bytes/element.  If a slab's LZSS container fits, its exchange
+    is lossless w.r.t. the uint16 codes; otherwise it degrades to the codes'
+    high bytes (int8 precision — error feedback recommended, see
+    CompressionConfig).
     """
-    slab = padded_slab.shape[0]
+    n_slabs, slab = padded.shape
     c = cfg.chunk_symbols
-    nc = slab // c
     cap = _cap_bytes(slab, ratio_cap)
-    blob, total = compress_chunks(padded_slab.reshape(nc, c), cfg)
-    used_lz = total <= cap
+    blobs, totals = pipeline.compress_many_chunks(
+        padded.reshape(n_slabs, slab // c, c), cfg,
+        jnp.full((n_slabs,), slab * 2, jnp.int32),
+    )
+    used_lz = totals <= cap
     if cap >= slab * 2:  # budget fits raw u16: lossless fallback
         fb = jnp.stack(
-            [padded_slab & 0xFF, padded_slab >> 8], axis=1
-        ).reshape(-1)[:cap]
+            [padded & 0xFF, padded >> 8], axis=2
+        ).reshape(n_slabs, -1)[:, :cap]
     else:                # tight budget: int8 fallback (high bytes)
-        fb = jnp.pad(padded_slab >> 8, (0, max(0, cap - slab)))[:cap]
-    payload = jnp.where(used_lz, blob[:cap].astype(jnp.int32), fb)
+        fb = jnp.pad(padded >> 8, ((0, 0), (0, max(0, cap - slab))))[:, :cap]
+    payload = jnp.where(
+        used_lz[:, None], blobs[:, :cap].astype(jnp.int32), fb
+    )
     return payload.astype(jnp.uint8), used_lz
 
 
-def _decompress_slab(payload, used_lz, slab, cfg):
-    """Inverse of _compress_slab -> (slab,) int32 codes."""
+def _decompress_slabs(payload, used_lz, slab, cfg):
+    """Inverse of _compress_slabs -> (n_slabs, slab) int32 codes."""
+    n_slabs, cap = payload.shape
     c = cfg.chunk_symbols
     nc = slab // c
-    cap_full = fmt.max_compressed_bytes(slab * 2, 2, c)
+    # The container's header + tables always fit inside the cap prefix
+    # (48 + 8*nc << slab <= cap), so the payload buffer parses in place —
+    # no worst-case zero-padding; the section gathers are bounds-checked.
     p32 = payload.astype(jnp.int32)
-    blob = jnp.zeros((cap_full,), jnp.int32).at[: p32.shape[0]].set(p32)
-    n_tokens, payload_sizes = _parse_tables(blob, nc)
-    syms_lz = decompress_chunks(
-        blob.astype(jnp.uint8), n_tokens, payload_sizes,
+    n_tokens, payload_sizes = jax.vmap(
+        lambda b: fmt.parse_tables_jax(b, nc)
+    )(p32)
+    syms_lz = pipeline.decompress_many_chunks(
+        payload, n_tokens, payload_sizes,
         symbol_size=2, chunk_symbols=c, n_chunks=nc, decoder=cfg.decoder,
-    ).reshape(-1)
-    cap = p32.shape[0]
+    ).reshape(n_slabs, -1)
     if cap >= slab * 2:  # lossless raw-u16 fallback
-        pairs = p32[: slab * 2].reshape(-1, 2)
-        syms_raw = pairs[:, 0] | (pairs[:, 1] << 8)
+        pairs = p32[:, : slab * 2].reshape(n_slabs, -1, 2)
+        syms_raw = pairs[..., 0] | (pairs[..., 1] << 8)
     else:                # int8 fallback: centre of the low byte
-        hi = jnp.pad(p32, (0, max(0, slab - cap)))[:slab]
+        hi = jnp.pad(p32, ((0, 0), (0, max(0, slab - cap))))[:, :slab]
         syms_raw = (hi << 8) | 128
-    return jnp.where(used_lz, syms_lz, syms_raw)
+    return jnp.where(used_lz[:, None], syms_lz, syms_raw)
 
 
 def compress_leaf(g, cfg: LZSSConfig = GRAD_LZ, ratio_cap: float = 2.0):
@@ -143,9 +140,7 @@ def compress_leaf(g, cfg: LZSSConfig = GRAD_LZ, ratio_cap: float = 2.0):
     codes, scale = quantize_u16(g.reshape(-1))
     slab, n_slabs = _slab_geometry(n, cfg)
     padded = jnp.pad(codes, (0, n_slabs * slab - n)).reshape(n_slabs, slab)
-    payload, used_lz = jax.vmap(
-        lambda s: _compress_slab(s, cfg, ratio_cap)
-    )(padded)
+    payload, used_lz = _compress_slabs(padded, cfg, ratio_cap)
     return {
         "payload": payload.reshape(-1),
         "used_lz": used_lz,
@@ -162,8 +157,8 @@ def decompress_leaf(wire, shape, cfg: LZSSConfig = GRAD_LZ,
     slab, n_slabs = _slab_geometry(n, cfg)
     cap = _cap_bytes(slab, ratio_cap)
     payload = wire["payload"].reshape(n_slabs, cap)
-    codes = jax.vmap(lambda p, u: _decompress_slab(p, u, slab, cfg))(
-        payload, wire["used_lz"]
+    codes = _decompress_slabs(
+        payload, wire["used_lz"], slab, cfg
     ).reshape(-1)[:n]
     return dequantize_u16(codes, wire["scale"]).reshape(shape)
 

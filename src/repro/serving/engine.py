@@ -1,10 +1,13 @@
 """Batched serving engine: prefill-by-decode + greedy generation loop.
 
 Small-scale reference engine over transformer.decode_step: fixed batch of
-sequences, per-step greedy sampling, optional KV block eviction through
-serving/kvcache.py.  The compiled serve path for roofline purposes is
-launch/steps.py:make_decode_step; this engine is the correctness harness and
-example driver.
+sequences, per-step greedy sampling, optional KV block offload through
+serving/kvcache.py.  When ``kv_offload`` is on, cold blocks (LRU past the
+tracker budget) are copied to the host-side block store each eviction round
+— every round's blocks compressed in ONE batched GPULZ dispatch
+(``KVBlockStore.evict_many``), not one ``compress()`` per block.  The
+compiled serve path for roofline purposes is launch/steps.py:make_decode_step;
+this engine is the correctness harness and example driver.
 """
 
 from __future__ import annotations
@@ -26,15 +29,43 @@ class GenerationResult:
 
 
 class ServingEngine:
-    def __init__(self, cfg, params, max_len: int = 512, kv_compress=False):
+    def __init__(self, cfg, params, max_len: int = 512, kv_compress=False,
+                 kv_offload: bool = False, block_tokens: int = 256,
+                 budget_blocks: int = 1024, evict_every: int = 8):
         self.cfg = cfg
         self.params = params
         self.max_len = max_len
+        self.kv_offload = kv_offload
+        self.evict_every = evict_every
         self.kv_store = KVBlockStore(compress=kv_compress)
-        self.tracker = PagedKVTracker()
+        self.tracker = PagedKVTracker(block_tokens=block_tokens,
+                                      budget_blocks=budget_blocks)
         self._step = jax.jit(
             lambda p, c, t, pos: transformer.decode_step(p, cfg, c, t, pos)
         )
+
+    def _offload_cold_blocks(self, caches) -> int:
+        """Copy every cold KV block to the store in one batched dispatch."""
+        cands = self.tracker.eviction_candidates()
+        if not cands:
+            return 0
+        bt = self.tracker.block_tokens
+        items = []
+        for sid, blk in cands:
+            parts = []
+            for layer in caches:
+                kv = layer.get("attn")
+                if not kv:
+                    continue
+                for name in ("k", "v"):
+                    if name in kv:
+                        block = np.asarray(kv[name][sid, blk * bt:(blk + 1) * bt])
+                        parts.append(block.reshape(-1).view(np.uint8))
+            if parts:
+                items.append(((sid, blk), np.concatenate(parts)))
+            self.tracker.drop((sid, blk))
+        self.kv_store.evict_many(items)
+        return len(items)
 
     def generate(self, prompts: np.ndarray, max_new_tokens: int = 32,
                  eos_id: int = -1) -> GenerationResult:
@@ -52,6 +83,8 @@ class ServingEngine:
             n_steps += 1
             for sid in range(b):
                 self.tracker.touch(sid, pos)
+            if self.kv_offload and n_steps % self.evict_every == 0:
+                self._offload_cold_blocks(caches)
             if pos + 1 < tp:
                 toks = jnp.asarray(prompts[:, pos + 1])  # teacher-forced prefill
             else:

@@ -4,6 +4,10 @@ The in-graph decode caches live in launch/steps.py; this module is the
 host-side block manager a serving deployment wraps around them: fixed-size
 blocks, LRU eviction of cold blocks to host memory, evicted blocks GPULZ-
 compressed (S=2 over bf16 — the paper's multi-byte rule for 2-byte data).
+
+Eviction is batched: ``evict_many`` compresses every cold block of an
+eviction round in ONE jitted dispatch (``lzss.compress_many``) instead of one
+``compress()`` call per block, and ``restore_many`` is the batched inverse.
 """
 
 from __future__ import annotations
@@ -15,6 +19,9 @@ import numpy as np
 
 from repro.core import lzss
 
+# Geometry for KV blocks (S=2 over bf16).  The Kernel-I backend is resolved
+# lazily in KVBlockStore.__init__ — NOT here — so importing this module never
+# initializes the JAX platform as a side effect.
 KV_LZ = lzss.LZSSConfig(symbol_size=2, window=64, chunk_symbols=2048)
 
 
@@ -24,6 +31,7 @@ class BlockStats:
     restores: int = 0
     evicted_bytes_raw: int = 0
     evicted_bytes_stored: int = 0
+    eviction_dispatches: int = 0    # jitted compression calls issued
 
     @property
     def eviction_ratio(self) -> float:
@@ -33,32 +41,82 @@ class BlockStats:
 class KVBlockStore:
     """Host-side store of evicted KV blocks, compressed with GPULZ."""
 
-    def __init__(self, compress: bool = True, config=KV_LZ):
+    def __init__(self, compress: bool = True, config=None):
         self.compress = compress
+        if config is None:
+            config = dataclasses.replace(
+                KV_LZ, backend=lzss.default_backend()
+            )
         self.config = config
         self._store: dict = {}
         self.stats = BlockStats()
 
-    def evict(self, key, block: np.ndarray):
-        raw = np.ascontiguousarray(block)
-        meta = (raw.dtype.str, raw.shape)
+    def evict_many(self, items) -> None:
+        """Batch-evict ``[(key, block), ...]`` — one compression dispatch.
+
+        Blocks may be ragged (different shapes/sizes); the batched pipeline
+        pads them to a common chunk count and every header records the true
+        size.
+        """
+        items = list(items)
+        if not items:
+            return
+        keys = [k for k, _ in items]
+        raws = [np.ascontiguousarray(b) for _, b in items]
+        metas = [(r.dtype.str, r.shape) for r in raws]
         if self.compress:
-            res = lzss.compress(raw.view(np.uint8).reshape(-1), self.config)
-            self._store[key] = ("gpulz", meta, res.data)
-            self.stats.evicted_bytes_stored += res.total_bytes
+            batch = lzss.compress_many(
+                [r.view(np.uint8).reshape(-1) for r in raws], self.config
+            )
+            self.stats.eviction_dispatches += 1
+            for i, (key, meta) in enumerate(zip(keys, metas)):
+                res = batch[i]
+                # copy: res.data is a view into the batch's (B, cap) buffer;
+                # storing the view would pin the whole padded batch in memory
+                self._store[key] = ("gpulz", meta, res.data.copy())
+                self.stats.evicted_bytes_stored += res.total_bytes
         else:
-            self._store[key] = ("raw", meta, raw.tobytes())
-            self.stats.evicted_bytes_stored += raw.nbytes
-        self.stats.evictions += 1
-        self.stats.evicted_bytes_raw += raw.nbytes
+            for key, meta, raw in zip(keys, metas, raws):
+                self._store[key] = ("raw", meta, raw.tobytes())
+                self.stats.evicted_bytes_stored += raw.nbytes
+        self.stats.evictions += len(raws)
+        self.stats.evicted_bytes_raw += sum(r.nbytes for r in raws)
+
+    def evict(self, key, block: np.ndarray) -> None:
+        self.evict_many([(key, block)])
+
+    def _reassemble(self, meta, raw_bytes: np.ndarray) -> np.ndarray:
+        dtype, shape = meta
+        return raw_bytes.view(np.dtype(dtype)).reshape(shape)
+
+    def restore_many(self, keys) -> list:
+        """Batch-restore blocks — one decompression dispatch per geometry."""
+        keys = list(keys)
+        missing = [k for k in keys if k not in self._store]
+        if missing:  # validate before mutating: a bad key must not lose data
+            raise KeyError(f"blocks not in store: {missing}")
+        popped = [self._store.pop(k) for k in keys]
+        self.stats.restores += len(keys)
+        out = [None] * len(keys)
+        groups: dict = {}  # container geometry -> block indices
+        for i, (codec, _, blob) in enumerate(popped):
+            if codec == "gpulz":
+                h = lzss.fmt.parse_header(blob)
+                key = (h.symbol_size, h.chunk_symbols, h.n_chunks)
+                groups.setdefault(key, []).append(i)
+        for idxs in groups.values():
+            raws = lzss.decompress_many([popped[i][2] for i in idxs])
+            for i, raw in zip(idxs, raws):
+                out[i] = self._reassemble(popped[i][1], raw)
+        for i, (codec, meta, payload) in enumerate(popped):
+            if codec == "raw":
+                out[i] = self._reassemble(
+                    meta, np.frombuffer(payload, np.uint8)
+                )
+        return out
 
     def restore(self, key) -> np.ndarray:
-        codec, (dtype, shape), payload = self._store.pop(key)
-        self.stats.restores += 1
-        if codec == "gpulz":
-            raw = lzss.decompress(payload)
-            return raw.view(np.dtype(dtype)).reshape(shape)
-        return np.frombuffer(payload, np.dtype(dtype)).reshape(shape)
+        return self.restore_many([key])[0]
 
     def __contains__(self, key):
         return key in self._store

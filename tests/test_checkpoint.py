@@ -68,3 +68,34 @@ def test_no_tmp_dirs_left(tmp_path, state):
     mgr = CheckpointManager(str(tmp_path), compress=False)
     mgr.save(state, 1)
     assert not [d for d in os.listdir(tmp_path) if d.endswith(".tmp")]
+
+
+def test_save_batches_dtype_classes(tmp_path, state, monkeypatch):
+    """Leaves of a dtype class go through one batched dispatch, not one
+    compress() call per leaf."""
+    from repro.checkpoint import manager as mgr_mod
+    from repro.core import lzss
+
+    calls = {"many": 0, "single": 0}
+    real_many = lzss.compress_many
+
+    def counting_many(arrays, cfg):
+        calls["many"] += 1
+        return real_many(arrays, cfg)
+
+    def forbidden_single(*a, **k):
+        calls["single"] += 1
+        raise AssertionError("save() must use the batched pipeline API")
+
+    monkeypatch.setattr(mgr_mod.lzss, "compress_many", counting_many)
+    monkeypatch.setattr(mgr_mod.lzss, "compress", forbidden_single)
+    mgr = CheckpointManager(str(tmp_path), compress=True)
+    mgr.save(state, 1)
+    assert calls["single"] == 0
+    # state has 3 compressible leaves (2 f32 in one geometry bucket + 1 bf16)
+    # -> at most one dispatch per (symbol_size, bucket) group
+    assert 1 <= calls["many"] <= 3
+    restored, step = mgr.restore_latest(jax.eval_shape(lambda: state))
+    assert step == 1
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

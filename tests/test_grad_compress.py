@@ -26,8 +26,7 @@ def test_wire_roundtrip_lossless_budget(redundant):
         g = np.repeat(rng.normal(size=512) * 0.1, 16).astype(np.float32)
     else:
         g = rng.normal(size=8192).astype(np.float32)
-    cfg = LZSSConfig(symbol_size=2, window=32, chunk_symbols=512,
-                     selector="doubling")
+    cfg = LZSSConfig(symbol_size=2, window=32, chunk_symbols=512)
     wire = gc.compress_leaf(jnp.asarray(g), cfg, ratio_cap=1.0)
     out = np.asarray(gc.decompress_leaf(wire, g.shape, cfg, ratio_cap=1.0))
     codes, scale = gc.quantize_u16(jnp.asarray(g))
@@ -42,8 +41,7 @@ def test_wire_tight_budget_halves_bytes():
     stay u16-lossless, noise slabs degrade to int8."""
     rng = np.random.default_rng(1)
     sparse = jnp.zeros((8192,), jnp.float32).at[::64].set(0.5)
-    cfg = LZSSConfig(symbol_size=2, window=32, chunk_symbols=512,
-                     selector="doubling")
+    cfg = LZSSConfig(symbol_size=2, window=32, chunk_symbols=512)
     wire = gc.compress_leaf(sparse, cfg, ratio_cap=2.0)
     assert wire["payload"].size == 8192  # 1 B/elem
     assert bool(jnp.all(wire["used_lz"]))

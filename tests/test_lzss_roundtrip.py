@@ -1,8 +1,10 @@
-"""Core invariant: decompress(compress(x)) == x for ANY input, any config."""
+"""Core invariant: decompress(compress(x)) == x for ANY input, any config.
+
+Property-based variants (hypothesis) live in test_properties.py.
+"""
 
 import numpy as np
 import pytest
-from hypothesis import given, strategies as st
 
 from repro.core import lzss
 
@@ -56,13 +58,13 @@ def test_roundtrip_unaligned_length():
     roundtrip(np.arange(1003, dtype=np.int64).view(np.uint8)[:4001], cfg)
 
 
-def test_selector_variants_agree():
+def test_selector_backends_agree():
     rng = np.random.default_rng(3)
     data = np.repeat(rng.integers(0, 16, 1000), rng.integers(1, 6, 1000))
     data = data.astype(np.uint16)
     kw = dict(symbol_size=2, window=64, chunk_symbols=512)
-    a = lzss.compress(data, lzss.LZSSConfig(selector="scan", **kw))
-    b = lzss.compress(data, lzss.LZSSConfig(selector="doubling", **kw))
+    a = lzss.compress(data, lzss.LZSSConfig(backend="xla-scan", **kw))
+    b = lzss.compress(data, lzss.LZSSConfig(backend="xla", **kw))
     assert np.array_equal(a.data, b.data)
 
 
@@ -82,28 +84,9 @@ def test_pallas_matcher_matches_xla_end_to_end():
     data = np.repeat(rng.integers(0, 32, 800), rng.integers(1, 5, 800))
     data = data.astype(np.uint16)[:2048]
     kw = dict(symbol_size=2, window=32, chunk_symbols=256)
-    a = lzss.compress(data, lzss.LZSSConfig(matcher="xla", **kw))
-    b = lzss.compress(data, lzss.LZSSConfig(matcher="pallas", **kw))
+    a = lzss.compress(data, lzss.LZSSConfig(backend="xla", **kw))
+    b = lzss.compress(data, lzss.LZSSConfig(backend="pallas-match", **kw))
     assert np.array_equal(a.data, b.data)
-
-
-@given(
-    data=st.binary(min_size=0, max_size=2000),
-    symbol_size=st.sampled_from([1, 2, 4]),
-    window=st.sampled_from([4, 17, 64, 255]),
-)
-def test_roundtrip_property(data, symbol_size, window):
-    arr = np.frombuffer(data, np.uint8)
-    cfg = lzss.LZSSConfig(symbol_size=symbol_size, window=window,
-                          chunk_symbols=128)
-    roundtrip(arr, cfg)
-
-
-@given(st.lists(st.integers(0, 3), min_size=1, max_size=600))
-def test_roundtrip_low_entropy_property(vals):
-    arr = np.array(vals, np.uint8)
-    cfg = lzss.LZSSConfig(symbol_size=1, window=32, chunk_symbols=128)
-    roundtrip(arr, cfg)
 
 
 def test_ratio_accounting_exact():

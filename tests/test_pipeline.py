@@ -1,0 +1,209 @@
+"""Pluggable pipeline backends: fused-vs-xla container equality, registry
+semantics, the batched in-graph API, and the decompress dispatch-padding
+regression.
+
+Pallas kernels execute in interpret mode on CPU, so chunk sizes here are kept
+small; containers are compared byte-for-byte (integer pipeline => exact)."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import format as fmt, lzss, pipeline
+
+
+def _corpus(seed, n=1500):
+    """Run-heavy + noisy segments: exercises matches, literals and flags."""
+    rng = np.random.default_rng(seed)
+    runs = np.repeat(rng.integers(0, 16, 300), rng.integers(1, 8, 300))
+    noise = rng.integers(0, 256, 300)
+    return np.concatenate([runs, noise, runs]).astype(np.uint16)[:n]
+
+
+# ------------------------------------------------------------ registry
+
+
+def test_registry_lists_all_backends():
+    assert {"xla", "xla-scan", "pallas-match", "fused"} <= set(
+        lzss.available_backends()
+    )
+
+
+def test_unknown_backend_rejected():
+    with pytest.raises(ValueError, match="unknown backend"):
+        lzss.LZSSConfig(backend="nope")
+    with pytest.raises(ValueError, match="unknown backend"):
+        pipeline.get_backend("nope")
+
+
+def test_register_custom_backend():
+    class Echo:
+        name = "test-echo"
+
+        def kernel1(self, symbols, cfg):
+            return pipeline.get_backend("xla").kernel1(symbols, cfg)
+
+    pipeline.register_backend(Echo())
+    try:
+        cfg = lzss.LZSSConfig(symbol_size=1, window=16, chunk_symbols=64,
+                              backend="test-echo")
+        data = _corpus(0).astype(np.uint8)
+        ref = lzss.LZSSConfig(symbol_size=1, window=16, chunk_symbols=64)
+        assert np.array_equal(
+            lzss.compress(data, cfg).data, lzss.compress(data, ref).data
+        )
+    finally:
+        pipeline._BACKENDS.pop("test-echo", None)
+
+
+# ------------------------------------- fused == xla, bit for bit
+
+
+@pytest.mark.parametrize("symbol_size", [1, 2, 4])
+@pytest.mark.parametrize("level", [1, 2, 3, 4])
+def test_fused_container_identical_to_xla(symbol_size, level):
+    window = lzss.WINDOW_LEVELS[level]
+    data = _corpus(symbol_size * 10 + level)
+    kw = dict(symbol_size=symbol_size, window=window, chunk_symbols=128)
+    a = lzss.compress(data, lzss.LZSSConfig(backend="xla", **kw))
+    b = lzss.compress(data, lzss.LZSSConfig(backend="fused", **kw))
+    assert a.total_bytes == b.total_bytes
+    assert np.array_equal(a.data, b.data)
+    # and the container actually decodes back to the input
+    out = lzss.decompress(b.data)
+    assert np.array_equal(out, data.view(np.uint8).reshape(-1))
+
+
+def test_fused_routes_through_kernel1(monkeypatch):
+    """backend='fused' must enter ops.lz_kernel1; backend='xla' must not."""
+    from repro.kernels import ops
+
+    calls = {"n": 0}
+    real = ops.lz_kernel1
+
+    def counting(*args, **kwargs):
+        calls["n"] += 1
+        return real(*args, **kwargs)
+
+    monkeypatch.setattr(ops, "lz_kernel1", counting)
+    data = _corpus(42)
+    # unusual geometry => fresh jit trace, so the python-level kernel entry
+    # is observed (a cached trace would bypass the wrapper)
+    kw = dict(symbol_size=2, window=31, chunk_symbols=88)
+    lzss.compress(data, lzss.LZSSConfig(backend="xla", **kw))
+    assert calls["n"] == 0
+    lzss.compress(data, lzss.LZSSConfig(backend="fused", **kw))
+    assert calls["n"] == 1
+
+
+# -------------------------------------------------- batched in-graph API
+
+
+def test_compress_many_ragged_roundtrip():
+    rng = np.random.default_rng(7)
+    items = [
+        np.repeat(rng.integers(0, 8, 50), rng.integers(1, 6, 50)).astype(np.uint8),
+        rng.integers(0, 256, 1).astype(np.uint8),
+        rng.integers(0, 4, 3000).astype(np.uint8),
+        np.zeros(513, np.uint8),
+    ]
+    cfg = lzss.LZSSConfig(symbol_size=1, window=32, chunk_symbols=128)
+    batch = lzss.compress_many(items, cfg)
+    assert len(batch) == len(items)
+    outs = lzss.decompress_many(batch)
+    for item, out in zip(items, outs):
+        assert np.array_equal(out, item)
+    # every row is also a standalone container: per-item decompress agrees
+    for b, item in enumerate(items):
+        assert np.array_equal(lzss.decompress(batch[b].data), item)
+        assert batch[b].orig_bytes == item.size
+
+
+def test_compress_many_2d_batch_and_fused():
+    rng = np.random.default_rng(8)
+    block = np.repeat(rng.integers(0, 6, (4, 64)), 4, axis=1).astype(np.uint8)
+    cfg = lzss.LZSSConfig(symbol_size=1, window=16, chunk_symbols=64,
+                          backend="fused")
+    batch = lzss.compress_many(block, cfg)
+    outs = lzss.decompress_many(batch)
+    for i in range(block.shape[0]):
+        assert np.array_equal(outs[i], block[i])
+    # batched containers == the single-buffer path, byte for byte
+    single = lzss.compress(block[0], cfg)
+    assert np.array_equal(batch[0].data, single.data)
+
+
+def test_compress_many_matches_per_item_compress():
+    rng = np.random.default_rng(9)
+    items = [rng.integers(0, 4, n).astype(np.uint8) for n in (700, 700, 700)]
+    cfg = lzss.LZSSConfig(symbol_size=1, window=32, chunk_symbols=128)
+    batch = lzss.compress_many(items, cfg)
+    for b, item in enumerate(items):
+        assert np.array_equal(batch[b].data, lzss.compress(item, cfg).data)
+
+
+def test_decompress_many_rejects_mixed_geometry():
+    cfg_a = lzss.LZSSConfig(symbol_size=1, window=16, chunk_symbols=64)
+    cfg_b = lzss.LZSSConfig(symbol_size=2, window=16, chunk_symbols=64)
+    a = lzss.compress(np.zeros(100, np.uint8), cfg_a)
+    b = lzss.compress(np.zeros(100, np.uint8), cfg_b)
+    with pytest.raises(ValueError, match="homogeneous"):
+        lzss.decompress_many([a.data, b.data])
+
+
+def test_in_graph_batched_cores_roundtrip():
+    """compress_many_chunks/decompress_many_chunks compose under jit."""
+    rng = np.random.default_rng(10)
+    c, nc, B = 64, 2, 3
+    raw = np.repeat(rng.integers(0, 5, (B, nc * c // 4)), 4, axis=1)
+    symbols = jnp.asarray(raw.reshape(B, nc, c).astype(np.int32))
+    cfg = lzss.LZSSConfig(symbol_size=1, window=16, chunk_symbols=c)
+    blobs, totals = pipeline.compress_many_chunks(symbols, cfg)
+    import jax
+
+    n_tok, pay = jax.vmap(
+        lambda b: fmt.parse_tables_jax(b.astype(jnp.int32), nc)
+    )(blobs)
+    back = pipeline.decompress_many_chunks(
+        blobs, n_tok, pay, symbol_size=1, chunk_symbols=c, n_chunks=nc
+    )
+    np.testing.assert_array_equal(np.asarray(back), raw.reshape(B, nc, c))
+
+
+# ------------------------------------------- header truth + dispatch pad
+
+
+def test_header_orig_bytes_written_in_graph():
+    """No host-side header patching: the jitted core emits the true size."""
+    data = np.arange(777, dtype=np.uint8)
+    cfg = lzss.LZSSConfig(symbol_size=2, window=32, chunk_symbols=256)
+    res = lzss.compress(data, cfg)
+    h = fmt.parse_header(res.data)
+    assert h.orig_bytes == 777
+    # the same header bytes appear in the batched path
+    batch = lzss.compress_many([data], cfg)
+    assert fmt.parse_header(batch[0].data).orig_bytes == 777
+
+
+def test_decompress_dispatch_is_linear_not_worst_case():
+    """Small blobs must not be zero-padded to the worst-case capacity of
+    their chunk geometry (the old quadratic-ish host blow-up)."""
+    cfg = lzss.LZSSConfig(symbol_size=2, window=128, chunk_symbols=2048)
+    res = lzss.compress(np.zeros(64, np.uint8), cfg)  # ~60-byte container
+    cap = fmt.max_compressed_bytes(
+        1 * 2048 * 2, 2, 2048
+    )
+    dispatch = lzss._dispatch_capacity(res.data.size)
+    assert dispatch <= res.data.size + lzss._DISPATCH_QUANTUM
+    assert dispatch < cap  # strictly smaller than the old worst-case pad
+    # and correctness is unchanged
+    assert np.array_equal(lzss.decompress(res.data), np.zeros(64, np.uint8))
+
+
+def test_dispatch_capacity_buckets():
+    q = lzss._DISPATCH_QUANTUM
+    assert lzss._dispatch_capacity(1) == q
+    assert lzss._dispatch_capacity(q) == q
+    assert lzss._dispatch_capacity(q + 1) == 2 * q
+    for n in (5, 4097, 100_000):
+        assert lzss._dispatch_capacity(n) >= n

@@ -1,0 +1,108 @@
+"""Property-based tests (hypothesis).
+
+hypothesis is an optional [test] extra — the offline CI container doesn't
+ship it, so this module is guarded with importorskip; the deterministic
+variants of these invariants live in the per-domain test files.
+"""
+
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+
+from hypothesis import given, strategies as st  # noqa: E402
+
+from repro.core import encode, lzss, match, quant  # noqa: E402
+
+
+def roundtrip(data: np.ndarray, cfg: lzss.LZSSConfig):
+    res = lzss.compress(data, cfg)
+    out = lzss.decompress(res.data)
+    raw = np.ascontiguousarray(data).view(np.uint8).reshape(-1)
+    assert np.array_equal(out, raw), f"roundtrip failed: cfg={cfg} n={raw.size}"
+    return res
+
+
+@given(
+    data=st.binary(min_size=0, max_size=2000),
+    symbol_size=st.sampled_from([1, 2, 4]),
+    window=st.sampled_from([4, 17, 64, 255]),
+)
+def test_roundtrip_property(data, symbol_size, window):
+    arr = np.frombuffer(data, np.uint8)
+    cfg = lzss.LZSSConfig(symbol_size=symbol_size, window=window,
+                          chunk_symbols=128)
+    roundtrip(arr, cfg)
+
+
+@given(st.lists(st.integers(0, 3), min_size=1, max_size=600))
+def test_roundtrip_low_entropy_property(vals):
+    arr = np.array(vals, np.uint8)
+    cfg = lzss.LZSSConfig(symbol_size=1, window=32, chunk_symbols=128)
+    roundtrip(arr, cfg)
+
+
+@given(st.lists(st.integers(0, 3), min_size=1, max_size=400))
+def test_backends_identical_property(vals):
+    """Every registered backend emits byte-identical containers."""
+    arr = np.array(vals, np.uint8)
+    results = []
+    for backend in lzss.available_backends():
+        cfg = lzss.LZSSConfig(symbol_size=1, window=16, chunk_symbols=64,
+                              backend=backend)
+        results.append(lzss.compress(arr, cfg).data)
+    for other in results[1:]:
+        np.testing.assert_array_equal(results[0], other)
+
+
+@given(
+    st.lists(st.integers(0, 4), min_size=16, max_size=128),
+    st.sampled_from([4, 16, 64]),
+    st.sampled_from([1, 2, 4]),
+)
+def test_selectors_agree_property(vals, w, s):
+    syms = np.array(vals, np.int32)[None, :]
+    lengths, _ = match.find_matches(syms, window=w)
+    mm = encode.min_match_length(s)
+    a = np.asarray(encode.select_tokens_scan(lengths, min_match=mm))
+    b = np.asarray(encode.select_tokens_doubling(lengths, min_match=mm))
+    np.testing.assert_array_equal(a, b)
+
+
+@given(
+    st.lists(st.integers(0, 2), min_size=8, max_size=96),
+    st.sampled_from([2, 7, 32]),
+)
+def test_match_invariants_property(vals, w):
+    syms = np.array(vals, np.int32)[None, :]
+    lengths, offsets = map(np.asarray, match.find_matches(syms, window=w))
+    c = syms.shape[1]
+    for i in range(c):
+        ln, off = lengths[0, i], offsets[0, i]
+        assert 0 <= ln <= min(w, 255)
+        if ln == 0:
+            assert off == 0
+            continue
+        assert 1 <= off <= min(i, w)
+        assert ln <= off          # paper §3.3.2: length never exceeds offset
+        assert i + ln <= c        # never crosses the chunk end
+        # the claimed match is real
+        np.testing.assert_array_equal(
+            syms[0, i : i + ln], syms[0, i - off : i - off + ln]
+        )
+
+
+@given(
+    st.lists(st.floats(-1e4, 1e4, allow_nan=False, width=32),
+             min_size=2, max_size=200),
+    st.sampled_from([1e-1, 1e-2, 1e-3]),
+)
+def test_error_bound_property(vals, rel):
+    import jax.numpy as jnp
+
+    x = np.array(vals, np.float32)
+    eb = quant.relative_error_bound(x, rel)
+    q = quant.quantize(jnp.asarray(x), error_bound=eb, ndim=1)
+    xr = quant.dequantize(q.codes, q.outlier_mask, q.outlier_vals,
+                          error_bound=eb, ndim=1)
+    assert float(jnp.max(jnp.abs(xr - x))) <= eb * 1.01 + 1e-6

@@ -41,3 +41,56 @@ def test_tracker_lru_eviction():
     tr.touch(0, 8)
     cands = tr.eviction_candidates()
     assert cands == [(0, 0)]  # oldest block evicted first
+
+
+def test_kv_store_batched_evict_single_dispatch():
+    """An eviction round compresses every block in ONE jitted call."""
+    store = KVBlockStore(compress=True)
+    rng = np.random.default_rng(2)
+    blocks = []
+    for i in range(5):
+        b = (rng.normal(size=(32, 4, 16)) * 0.02).astype(np.float32)
+        b[8:16] = b[0:8]
+        blocks.append((("s", i), b))
+    store.evict_many(blocks)
+    assert store.stats.evictions == 5
+    assert store.stats.eviction_dispatches == 1
+    outs = store.restore_many([k for k, _ in blocks])
+    for (_, want), got in zip(blocks, outs):
+        np.testing.assert_array_equal(got, want)
+    assert store.stats.restores == 5
+
+
+def test_kv_store_batched_ragged_blocks():
+    store = KVBlockStore(compress=True)
+    rng = np.random.default_rng(3)
+    big = np.repeat(rng.normal(size=(8, 64)).astype(np.float32), 8, axis=0)
+    small = np.zeros((4, 16), np.float32)
+    store.evict_many([("big", big), ("small", small)])
+    np.testing.assert_array_equal(store.restore("small"), small)
+    np.testing.assert_array_equal(store.restore("big"), big)
+
+
+def test_engine_offloads_cold_blocks():
+    """kv_offload copies LRU-cold blocks to the store in batched rounds."""
+    cfg = configs.reduced_config(configs.get_config("llama3.2-1b"))
+    params = model_lib.init_params(cfg, 0)
+    eng = ServingEngine(cfg, params, max_len=64, kv_compress=True,
+                        kv_offload=True, block_tokens=8, budget_blocks=2,
+                        evict_every=4)
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(0, cfg.vocab_size, (2, 4)).astype(np.int32)
+    eng.generate(prompts, max_new_tokens=40)
+    s = eng.kv_store.stats
+    assert s.evictions > 0
+    assert s.evicted_bytes_raw > 0
+    # batched: far fewer dispatches than evicted blocks
+    assert s.eviction_dispatches <= s.evictions
+
+
+def test_kv_store_restore_many_missing_key_loses_nothing():
+    store = KVBlockStore(compress=False)
+    store.evict("a", np.zeros((4, 4), np.float32))
+    with pytest.raises(KeyError):
+        store.restore_many(["a", "missing"])
+    assert "a" in store  # bad batch must not destroy stored blocks
