@@ -5,7 +5,7 @@
 
 PY ?= python
 
-.PHONY: test test-fast bench-pipeline bench
+.PHONY: test test-fast bench-pipeline bench-decode bench-smoke bench
 
 test:
 	PYTHONPATH=src $(PY) -m pytest -x -q
@@ -15,6 +15,21 @@ test-fast:
 
 bench-pipeline:
 	PYTHONPATH=src:. $(PY) benchmarks/fig9_throughput.py --backend fused
+
+bench-decode:
+	PYTHONPATH=src:. $(PY) benchmarks/fig10_decode.py --decoder fused
+
+# Tiny-size smoke of both fig sweeps: exercises the bench scripts end to end
+# (compress + decode + JSON artifacts) in seconds, even in interpret mode.
+# JSONs go to /tmp so the tracked BENCH_*.json perf records aren't clobbered
+# with meaningless smoke-size numbers.
+bench-smoke:
+	PYTHONPATH=src:. $(PY) benchmarks/fig9_throughput.py \
+		--nbytes 16384 --sweep-nbytes 8192 \
+		--out-json /tmp/BENCH_pipeline.smoke.json
+	PYTHONPATH=src:. $(PY) benchmarks/fig10_decode.py \
+		--nbytes 16384 --sweep-nbytes 8192 \
+		--out-json /tmp/BENCH_decode.smoke.json
 
 bench:
 	PYTHONPATH=src:. $(PY) benchmarks/run.py

@@ -1,0 +1,120 @@
+"""Decode-side throughput: decoder backend sweep (xla-parallel baseline vs
+the fused Pallas decoder, plus the paper-faithful xla-scan oracle on demand).
+
+The paper only parallelizes decompression at chunk granularity (the
+``xla-scan`` structure); this repo's restore paths (KV block restore,
+checkpoint load, serving cold-block fetch) ride the decoder registry in
+core/pipeline.py, where ``xla-parallel`` is the unfused beyond-paper decoder
+and ``fused`` keeps the whole decode chain (flag scan, the two prefix sums,
+payload gather, pointer-doubling copy resolution) in VMEM per chunk block —
+the decode-side mirror of the Fig. 4(c)->(d) compression comparison.
+
+``--decoder`` sweeps registry keys against the ``xla-parallel`` baseline and
+writes ``BENCH_decode.json``.  On CPU the fused decoder runs the Pallas
+kernel in interpret mode, so its absolute number is NOT meaningful off-TPU;
+the JSON tags the platform (same interpretation rules as BENCH_pipeline.json,
+see EXPERIMENTS.md §Decode)."""
+
+from __future__ import annotations
+
+import json
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit, throughput_gbs, time_fn
+from repro.core import lzss
+from repro.data import datasets
+
+
+def decoder_sweep(
+    data: np.ndarray,
+    decoders=("xla-parallel", "fused"),
+    sweep_nbytes: int = 1 << 16,
+    out_json: str = "BENCH_decode.json",
+    dataset: str = "hurr-quant",
+) -> dict:
+    """Time each registered decoder on the same container; write the JSON.
+
+    Throughput is measured in *decoded* (original) bytes per second — the
+    figure a restore path cares about.  A smaller slice than the headline
+    numbers keeps interpret-mode runs tractable off-TPU.
+    """
+    slice_ = np.ascontiguousarray(data[:sweep_nbytes])
+    res = lzss.compress(slice_, lzss.DEFAULT_CONFIG)
+    results = {}
+    for decoder in decoders:
+        key = lzss.resolve_decoder(decoder)
+        t = time_fn(
+            lambda: lzss.decompress(res.data, decoder=key), warmup=1, iters=2
+        )
+        gbs = throughput_gbs(slice_.nbytes, t)
+        emit(f"fig10/{dataset}/decoder-{key}", t, f"{gbs:.4f}")
+        results[key] = {
+            "seconds_per_call": t,
+            "gb_per_s": gbs,
+            "nbytes": int(slice_.nbytes),
+        }
+    record = {
+        "benchmark": "fig10_decoder_sweep",
+        "dataset": dataset,
+        "platform": jax.default_backend(),
+        "interpret_mode": jax.default_backend() != "tpu",
+        "container_bytes": int(res.total_bytes),
+        "ratio": res.ratio,
+        "decoders": results,
+    }
+    if "xla-parallel" in results and "fused" in results:
+        record["fused_over_xla_parallel"] = (
+            results["xla-parallel"]["seconds_per_call"]
+            / max(results["fused"]["seconds_per_call"], 1e-12)
+        )
+    with open(out_json, "w") as f:
+        json.dump(record, f, indent=2)
+    print(f"# wrote {out_json}")
+    return record
+
+
+def run(nbytes: int = 1 << 20, dataset: str = "hurr-quant",
+        decoder: str = "fused", sweep_nbytes: int = 1 << 16,
+        out_json: str = "BENCH_decode.json"):
+    print("# fig10: name,us_per_call,GB/s")
+    data = datasets.load(dataset, nbytes)
+
+    # headline: default-config container, decoded with the XLA baseline
+    res = lzss.compress(data, lzss.DEFAULT_CONFIG)
+    t = time_fn(
+        lambda: lzss.decompress(res.data, decoder="xla-parallel"),
+        warmup=1, iters=2,
+    )
+    emit(f"fig10/{dataset}/gpulz-decode", t,
+         f"{throughput_gbs(data.nbytes, t):.4f}")
+
+    # decoder sweep: always include the xla-parallel baseline so the JSON
+    # records both sides of the comparison
+    decoders = (
+        ("xla-parallel",) if lzss.resolve_decoder(decoder) == "xla-parallel"
+        else ("xla-parallel", decoder)
+    )
+    decoder_sweep(data, decoders=decoders, sweep_nbytes=sweep_nbytes,
+                  out_json=out_json, dataset=dataset)
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--nbytes", type=int, default=1 << 20)
+    ap.add_argument("--dataset", default="hurr-quant")
+    ap.add_argument("--decoder", default="fused",
+                    choices=sorted(lzss.available_decoders()) + ["auto"],
+                    help="decoder to sweep against the xla-parallel baseline")
+    ap.add_argument("--sweep-nbytes", type=int, default=1 << 16,
+                    help="corpus slice for the decoder sweep (interpret mode "
+                         "makes fused slow off-TPU)")
+    ap.add_argument("--out-json", default="BENCH_decode.json",
+                    help="sweep artifact path (point smoke runs elsewhere "
+                         "so the tracked perf record isn't clobbered)")
+    args = ap.parse_args()
+    run(nbytes=args.nbytes, dataset=args.dataset, decoder=args.decoder,
+        sweep_nbytes=args.sweep_nbytes, out_json=args.out_json)

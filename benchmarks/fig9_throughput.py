@@ -102,7 +102,8 @@ def backend_sweep(
 
 
 def run(nbytes: int = 1 << 20, dataset: str = "hurr-quant",
-        backend: str = "fused", sweep_nbytes: int = 1 << 16):
+        backend: str = "fused", sweep_nbytes: int = 1 << 16,
+        out_json: str = "BENCH_pipeline.json"):
     print("# fig9: name,us_per_call,GB/s")
     data = datasets.load(dataset, nbytes)
 
@@ -127,7 +128,7 @@ def run(nbytes: int = 1 << 20, dataset: str = "hurr-quant",
     # records both sides of the comparison
     backends = ("xla",) if backend == "xla" else ("xla", backend)
     backend_sweep(data, backends=backends, sweep_nbytes=sweep_nbytes,
-                  dataset=dataset)
+                  out_json=out_json, dataset=dataset)
 
 
 if __name__ == "__main__":
@@ -142,6 +143,9 @@ if __name__ == "__main__":
     ap.add_argument("--sweep-nbytes", type=int, default=1 << 16,
                     help="corpus slice for the backend sweep (interpret mode "
                          "makes fused slow off-TPU)")
+    ap.add_argument("--out-json", default="BENCH_pipeline.json",
+                    help="sweep artifact path (point smoke runs elsewhere "
+                         "so the tracked perf record isn't clobbered)")
     args = ap.parse_args()
     run(nbytes=args.nbytes, dataset=args.dataset, backend=args.backend,
-        sweep_nbytes=args.sweep_nbytes)
+        sweep_nbytes=args.sweep_nbytes, out_json=args.out_json)

@@ -52,17 +52,16 @@ class CheckpointManager:
     lz_window: int = 64
     lz_chunk: int = 4096
     lz_backend: str = "auto"   # Kernel-I backend; "auto" = fused on TPU
+    lz_decoder: str = "auto"   # decode registry key; "auto" = fused on TPU
 
     # ------------------------------------------------------------- save
 
     def _lz_config(self, symbol_size: int) -> "lzss.LZSSConfig":
-        backend = (
-            lzss.default_backend() if self.lz_backend == "auto"
-            else self.lz_backend
-        )
+        # "auto" backend/decoder resolve per-platform at dispatch time
         return lzss.LZSSConfig(
             symbol_size=symbol_size, window=self.lz_window,
-            chunk_symbols=self.lz_chunk, backend=backend,
+            chunk_symbols=self.lz_chunk, backend=self.lz_backend,
+            decoder=self.lz_decoder,
         )
 
     def save(self, state, step: int) -> str:
@@ -162,7 +161,9 @@ class CheckpointManager:
             ).append(name)
         decompressed = {}
         for group in geom_groups.values():
-            raws = lzss.decompress_many([blobs[n] for n in group])
+            raws = lzss.decompress_many(
+                [blobs[n] for n in group], decoder=self.lz_decoder
+            )
             decompressed.update(
                 {n: r.tobytes() for n, r in zip(group, raws)}
             )

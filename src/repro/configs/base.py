@@ -184,6 +184,9 @@ class CompressionConfig:
     lz_backend: str = "auto"         # Kernel-I backend registry key
                                      # (core/pipeline.py); "auto" = fused on
                                      # TPU, unfused xla elsewhere
+    lz_decoder: str = "auto"         # decode registry key; "auto" = fused
+                                     # Pallas decoder on TPU, xla-parallel
+                                     # elsewhere
 
 
 @dataclasses.dataclass(frozen=True)

@@ -1,6 +1,8 @@
-"""LZSS decompression.
+"""LZSS decompression (pure-XLA decoders).
 
-Two decoders over per-chunk aligned sections:
+These are the XLA entries of the decoder registry in core/pipeline.py
+(``xla-parallel`` / ``xla-scan``); the fused Pallas decoder lives in
+kernels/lz_decode.py.  Two decoders over per-chunk aligned sections:
 
   * ``decode_scan``     — sequential token walk per chunk (lax.scan, vmapped
     over chunks).  This is the paper's decompression parallelization (chunk

@@ -25,16 +25,23 @@ from repro.core.pipeline import (  # noqa: F401
     DEFAULT_CONFIG,
     WINDOW_LEVELS,
     CompressorBackend,
+    DecoderBackend,
     LZSSConfig,
     available_backends,
+    available_decoders,
     compress_chunks,
     compress_many_chunks,
     decompress_chunks,
     decompress_many_chunks,
     default_backend,
+    default_decoder,
     get_backend,
+    get_decoder,
     pack_symbols,
     register_backend,
+    register_decoder,
+    resolve_backend,
+    resolve_decoder,
     unpack_symbols,
 )
 
@@ -92,8 +99,12 @@ def compress(data, config: LZSSConfig = DEFAULT_CONFIG) -> CompressResult:
     return CompressResult(data=buf[:total], orig_bytes=n, total_bytes=total)
 
 
-def decompress(blob, decoder: str = "parallel") -> np.ndarray:
-    """Decompress a container -> uint8 array of the original bytes."""
+def decompress(blob, decoder: str = "auto") -> np.ndarray:
+    """Decompress a container -> uint8 array of the original bytes.
+
+    ``decoder`` selects the decode strategy by registry key
+    (``available_decoders()``; ``"auto"`` = fused Pallas decoder on TPU).
+    """
     blob = np.asarray(blob, np.uint8)
     h = fmt.parse_header(blob)
     n_tokens, payload_sizes = fmt.parse_tables(blob, h)
@@ -106,7 +117,9 @@ def decompress(blob, decoder: str = "parallel") -> np.ndarray:
         symbol_size=h.symbol_size,
         chunk_symbols=h.chunk_symbols,
         n_chunks=h.n_chunks,
-        decoder=decoder,
+        # canonicalize before the jit boundary: "auto"/aliases must share
+        # the resolved key's trace cache entry, not mint their own
+        decoder=resolve_decoder(decoder),
     )
     out = np.asarray(unpack_symbols(symbols.reshape(-1), h.symbol_size))
     return out[: h.orig_bytes]
@@ -180,12 +193,13 @@ def compress_many(
     )
 
 
-def decompress_many(batch, decoder: str = "parallel") -> list:
+def decompress_many(batch, decoder: str = "auto") -> list:
     """Decompress a batch of containers in ONE jitted dispatch.
 
     ``batch`` is a ``BatchedCompressResult`` or a list of container blobs.
     All containers must share the same geometry (S, C, n_chunks) — true for
-    anything produced by ``compress_many``.  Returns a list of uint8 arrays.
+    anything produced by ``compress_many``.  ``decoder`` selects the decode
+    strategy by registry key.  Returns a list of uint8 arrays.
     """
     if isinstance(batch, BatchedCompressResult):
         # slice rows to their live bytes: the stacked buffer is worst-case
@@ -218,7 +232,7 @@ def decompress_many(batch, decoder: str = "parallel") -> list:
         symbol_size=h0.symbol_size,
         chunk_symbols=h0.chunk_symbols,
         n_chunks=h0.n_chunks,
-        decoder=decoder,
+        decoder=resolve_decoder(decoder),  # one trace cache entry per key
     )
     s = h0.symbol_size
     flat = np.asarray(symbols).reshape(len(blobs), -1)

@@ -37,17 +37,35 @@ Registered backends:
                    in one VMEM-resident kernel; the redundant XLA selection
                    and local prefix sum are skipped entirely.
 
+Decompression mirrors the same design: ``DecoderBackend`` is the decode-side
+contract (per-chunk aligned flag/payload sections -> symbols), with its own
+registry (``register_decoder`` / ``get_decoder``) and entries
+
+  ``xla-parallel``  beyond-paper fully parallel XLA decoder
+                    (core/decode.py:decode_parallel).
+  ``xla-scan``      paper-faithful sequential token walk — the oracle.
+  ``fused``         fused Pallas decoder (kernels/lz_decode.py): flag
+                    extraction, both read/write prefix sums, payload gather
+                    and pointer-doubling copy resolution stay in VMEM per
+                    chunk block; symbols are written to HBM exactly once.
+
+``LZSSConfig.decoder`` accepts a registry key, ``"auto"`` (fused on TPU,
+xla-parallel elsewhere — resolved at dispatch, like ``default_backend()``)
+or the legacy aliases ``"parallel"``/``"scan"``, which are normalized to
+registry keys at construction.
+
 On TPU ``fused`` is the default hot path; elsewhere the kernels execute in
 interpret mode, so the default stays ``xla`` (identical bytes, no interpreter
-overhead).  All backends produce byte-identical containers — property- and
-sweep-tested in tests/test_pipeline.py.
+overhead).  All backends produce byte-identical containers and all decoders
+identical symbols — property- and sweep-tested in tests/test_pipeline.py and
+tests/test_decoders.py.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Dict, Literal, Protocol
+from typing import Dict, Protocol
 
 import jax
 import jax.numpy as jnp
@@ -59,23 +77,31 @@ from repro.core import deflate, encode, format as fmt, match
 
 
 def default_backend() -> str:
-    """The preferred backend for the current accelerator."""
+    """The preferred compressor backend for the current accelerator."""
     return "fused" if jax.default_backend() == "tpu" else "xla"
+
+
+def default_decoder() -> str:
+    """The preferred decoder for the current accelerator."""
+    return "fused" if jax.default_backend() == "tpu" else "xla-parallel"
 
 
 @dataclasses.dataclass(frozen=True)
 class LZSSConfig:
     """Paper parameters: S (symbol bytes), W (window), C (chunk symbols).
 
-    ``backend`` selects the Kernel-I execution strategy (see module
-    docstring); ``decoder`` selects the decompression strategy.
+    ``backend`` selects the Kernel-I execution strategy and ``decoder`` the
+    decompression strategy (see module docstring); both are registry keys,
+    and both accept ``"auto"`` (resolved per-platform at dispatch time).
+    The legacy decoder aliases ``"parallel"``/``"scan"`` normalize to their
+    registry keys here.
     """
 
     symbol_size: int = 2          # S in {1, 2, 4}
     window: int = 128             # W in [1, 255]; levels 1-4 = 32/64/128/255
     chunk_symbols: int = 2048     # C; VMEM-resident chunk
     backend: str = "xla"          # registry key, see available_backends()
-    decoder: Literal["parallel", "scan"] = "parallel"
+    decoder: str = "auto"         # registry key, see available_decoders()
 
     def __post_init__(self):
         if self.symbol_size not in (1, 2, 4):
@@ -84,10 +110,19 @@ class LZSSConfig:
             raise ValueError(f"window must be in [1, 255]: {self.window}")
         if self.chunk_symbols % 8:
             raise ValueError("chunk_symbols must be a multiple of 8")
-        if self.backend not in _BACKENDS:
+        if self.backend != "auto" and self.backend not in _BACKENDS:
             raise ValueError(
                 f"unknown backend {self.backend!r}; "
-                f"registered: {available_backends()}"
+                f"registered: {available_backends()} (also accepted: 'auto')"
+            )
+        object.__setattr__(
+            self, "decoder", _DECODER_ALIASES.get(self.decoder, self.decoder)
+        )
+        if self.decoder != "auto" and self.decoder not in _DECODERS:
+            raise ValueError(
+                f"unknown decoder {self.decoder!r}; "
+                f"registered: {available_decoders()} "
+                f"(also accepted: 'auto', {sorted(_DECODER_ALIASES)})"
             )
 
     @property
@@ -123,7 +158,7 @@ _BACKENDS: Dict[str, CompressorBackend] = {}
 
 
 def register_backend(backend: CompressorBackend) -> CompressorBackend:
-    """Register a backend instance under ``backend.name`` (latest wins).
+    """Register a backend *instance* under ``backend.name`` (latest wins).
 
     Caveat: ``compress_chunks`` jit-caches on the config (which carries only
     the backend *name*), so re-registering an existing name does not
@@ -134,13 +169,24 @@ def register_backend(backend: CompressorBackend) -> CompressorBackend:
     return backend
 
 
-def get_backend(name: str) -> CompressorBackend:
-    try:
-        return _BACKENDS[name]
-    except KeyError:
+def resolve_backend(name: str) -> str:
+    """Normalize a backend selector to a registered key.
+
+    Accepts registry keys and ``auto`` (fused Pallas Kernel I on TPU, xla
+    elsewhere) — the compress-side mirror of ``resolve_decoder``.
+    """
+    if name == "auto":
+        name = default_backend()
+    if name not in _BACKENDS:
         raise ValueError(
-            f"unknown backend {name!r}; registered: {available_backends()}"
-        ) from None
+            f"unknown backend {name!r}; registered: {available_backends()} "
+            f"(also accepted: 'auto')"
+        )
+    return name
+
+
+def get_backend(name: str) -> CompressorBackend:
+    return _BACKENDS[resolve_backend(name)]
 
 
 def available_backends() -> list:
@@ -173,12 +219,10 @@ class _XlaBackendBase:
         return dict(lengths=lengths, offsets=offsets, emitted=emitted, **fields)
 
 
-@register_backend
 class XlaBackend(_XlaBackendBase):
     name = "xla"
 
 
-@register_backend
 class XlaScanBackend(_XlaBackendBase):
     """Paper-faithful sequential selection walk (equivalence oracle)."""
 
@@ -186,7 +230,6 @@ class XlaScanBackend(_XlaBackendBase):
     selector = staticmethod(encode.select_tokens_scan)
 
 
-@register_backend
 class PallasMatchBackend(_XlaBackendBase):
     """Pallas matching kernel + unfused XLA select/prefix sums."""
 
@@ -198,7 +241,6 @@ class PallasMatchBackend(_XlaBackendBase):
         return ops.lz_match(symbols, window=cfg.window)
 
 
-@register_backend
 class FusedBackend:
     """Fused Pallas Kernel I (workflow (d)): selection and the local prefix
     sum stay in VMEM with the match intermediates; only the final token
@@ -224,12 +266,115 @@ class FusedBackend:
         return dict(out, use_match=use_match, sizes=sizes)
 
 
-# Instantiate the classes the decorator registered (register_backend stored
-# the class; the registry should hold callable instances).
-for _name, _b in list(_BACKENDS.items()):
-    if isinstance(_b, type):
-        _BACKENDS[_name] = _b()
-del _name, _b
+register_backend(XlaBackend())
+register_backend(XlaScanBackend())
+register_backend(PallasMatchBackend())
+register_backend(FusedBackend())
+
+
+# ------------------------------------------------------------- decoders
+
+
+class DecoderBackend(Protocol):
+    """Decode contract: per-chunk aligned sections -> symbols.
+
+    ``decode`` maps the (nc, C//8) int32 flag bytes, (nc, C*S) int32 payload
+    bytes and (nc,) int32 token counts (the arrays ``deflate.gather_section``
+    rebuilds from a container) to (nc, C) int32 symbols.
+    """
+
+    name: str
+
+    def decode(
+        self, flag_bytes: jnp.ndarray, payload: jnp.ndarray,
+        n_tokens: jnp.ndarray, *, symbol_size: int,
+    ) -> jnp.ndarray: ...
+
+
+_DECODERS: Dict[str, DecoderBackend] = {}
+
+# Legacy LZSSConfig.decoder values from before the registry existed.
+_DECODER_ALIASES = {"parallel": "xla-parallel", "scan": "xla-scan"}
+
+
+def register_decoder(decoder: DecoderBackend) -> DecoderBackend:
+    """Register a decoder *instance* under ``decoder.name`` (latest wins).
+
+    Same jit-cache caveat as ``register_backend``: ``decompress_chunks``
+    caches on the decoder *name*, so replacing a registered decoder in place
+    requires ``jax.clear_caches()`` (or a fresh name).
+    """
+    _DECODERS[decoder.name] = decoder
+    return decoder
+
+
+def resolve_decoder(name: str) -> str:
+    """Normalize a decoder selector to a registered key.
+
+    Accepts registry keys, the legacy aliases ``parallel``/``scan`` and
+    ``auto`` (fused Pallas decoder on TPU, xla-parallel elsewhere).
+    """
+    name = _DECODER_ALIASES.get(name, name)
+    if name == "auto":
+        name = default_decoder()
+    if name not in _DECODERS:
+        raise ValueError(
+            f"unknown decoder {name!r}; registered: {available_decoders()} "
+            f"(also accepted: 'auto', {sorted(_DECODER_ALIASES)})"
+        )
+    return name
+
+
+def get_decoder(name: str) -> DecoderBackend:
+    return _DECODERS[resolve_decoder(name)]
+
+
+def available_decoders() -> list:
+    return sorted(_DECODERS)
+
+
+class XlaParallelDecoder:
+    """Beyond-paper fully parallel XLA decoder (two prefix sums + pointer
+    doubling as separate XLA ops — see core/decode.py)."""
+
+    name = "xla-parallel"
+
+    def decode(self, flag_bytes, payload, n_tokens, *, symbol_size):
+        return decode_mod.decode_parallel(
+            flag_bytes, payload, n_tokens, symbol_size=symbol_size
+        )
+
+
+class XlaScanDecoder:
+    """Paper-faithful sequential token walk (equivalence oracle)."""
+
+    name = "xla-scan"
+
+    def decode(self, flag_bytes, payload, n_tokens, *, symbol_size):
+        return decode_mod.decode_scan(
+            flag_bytes, payload, n_tokens, symbol_size=symbol_size
+        )
+
+
+class FusedDecoder:
+    """Fused Pallas decoder (kernels/lz_decode.py): flag extraction, the two
+    read/write prefix sums, payload gather and pointer-doubling copy
+    resolution stay in VMEM per chunk block; decoded symbols are written to
+    HBM exactly once."""
+
+    name = "fused"
+
+    def decode(self, flag_bytes, payload, n_tokens, *, symbol_size):
+        from repro.kernels import ops  # lazy: kernels are optional at import
+
+        return ops.lz_decode(
+            flag_bytes, payload, n_tokens, symbol_size=symbol_size
+        )
+
+
+register_decoder(XlaParallelDecoder())
+register_decoder(XlaScanDecoder())
+register_decoder(FusedDecoder())
 
 
 # ------------------------------------------------------- symbol packing
@@ -301,13 +446,15 @@ def compress_chunks(symbols: jnp.ndarray, cfg: LZSSConfig, orig_bytes=None):
     jax.jit, static_argnames=("symbol_size", "chunk_symbols", "n_chunks", "decoder")
 )
 def decompress_chunks(
-    blob, n_tokens, payload_sizes, *, symbol_size, chunk_symbols, n_chunks, decoder
+    blob, n_tokens, payload_sizes, *, symbol_size, chunk_symbols, n_chunks,
+    decoder="auto",
 ):
     """Jittable core: container bytes -> (nc, C) int32 symbols.
 
     ``blob`` may be any buffer that covers the container's live bytes — the
     section gathers are bounds-checked (clipped + masked), so no worst-case
-    zero padding is required.
+    zero padding is required.  ``decoder`` is a registry key (or ``"auto"`` /
+    a legacy alias), dispatched through ``get_decoder``.
     """
     c, s, nc = chunk_symbols, symbol_size, n_chunks
     blob = blob.astype(jnp.int32)
@@ -323,12 +470,9 @@ def decompress_chunks(
     payload = deflate.gather_section(
         blob, sec_flags + fcsum[-1], payload_sizes, pay_off, c * s
     )
-    fn = (
-        decode_mod.decode_parallel
-        if decoder == "parallel"
-        else decode_mod.decode_scan
+    return get_decoder(decoder).decode(
+        flag_bytes, payload, n_tokens, symbol_size=s
     )
-    return fn(flag_bytes, payload, n_tokens, symbol_size=s)
 
 
 # --------------------------------------------------------- batched cores
@@ -357,7 +501,7 @@ def compress_many_chunks(symbols: jnp.ndarray, cfg: LZSSConfig, orig_bytes=None)
 )
 def decompress_many_chunks(
     blobs, n_tokens, payload_sizes, *, symbol_size, chunk_symbols, n_chunks,
-    decoder="parallel",
+    decoder="auto",
 ):
     """Batched inverse: (B, L) blobs + (B, nc) tables -> (B, nc, C) symbols."""
     return jax.vmap(

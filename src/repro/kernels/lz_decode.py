@@ -1,0 +1,165 @@
+"""Pallas TPU kernel for fused GPULZ decompression.
+
+The XLA reference decoder (core/decode.py:decode_parallel) stages every
+intermediate — flag bits, the two read/write prefix sums, per-token
+length/offset/literal columns, the token-id fill and ceil(log2 C) rounds of
+pointer doubling — through HBM as separate ops.  This kernel keeps the whole
+chain resident in VMEM per chunk block (cf. Sitaridi et al.,
+*Massively-Parallel Lossless Data Decompression*, PAPERS.md): the only HBM
+traffic is the compact flag/payload sections in and the decoded symbols out,
+written exactly once.
+
+Algorithm (identical math to decode_parallel, TPU-shaped):
+
+  flag extraction      one gather per position from the chunk's flag bytes
+  read offsets         prefix sum over [2 | S] token byte sizes
+                       (lane-shift doubling — no HBM cumsum)
+  token fields         payload gathers at the read offsets (len/off/literal)
+  write offsets        prefix sum over token output lengths
+  token-id fill        branchless binary search over the sorted token start
+                       positions (log2 C gathers) — replaces decode_parallel's
+                       scatter+cumsum, which has no efficient Mosaic lowering
+  copy resolution      ceil(log2 C) pointer-doubling gathers; match length <=
+                       offset (match.py) makes back-references a forest rooted
+                       at literals, so doubling terminates
+
+Like lz_match.py, ``chunks_per_block`` chunks ride the sublane dimension so
+the 8x128 VREG tile stays full for small C.  Kernels are validated in
+interpret mode against core/decode.py (tests/test_kernels.py).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+from repro.kernels.lz_match import _shift_right_zero
+
+
+def _ceil_log2(n: int) -> int:
+    k = 0
+    while (1 << k) < n:
+        k += 1
+    return max(1, k)
+
+
+def _prefix_sum_excl(x, idx, c):
+    """Exclusive prefix sum along lanes via log-shift doubling (stays in VMEM)."""
+    incl = x
+    k = 1
+    while k < c:
+        incl = incl + _shift_right_zero(incl, k, idx)
+        k *= 2
+    return incl - x
+
+
+def _decode_values(flag_bytes, payload, n_tokens, *, symbol_size):
+    """(G, cb) flags + (G, C*S) payload + (G,) counts -> (G, C) symbols."""
+    g, cb = flag_bytes.shape
+    c = cb * 8
+    s = symbol_size
+    t = lax.broadcasted_iota(jnp.int32, (g, c), 1)
+    active = (t < n_tokens[:, None]).astype(jnp.int32)
+
+    byte = jnp.take_along_axis(flag_bytes, t // 8, axis=1)
+    flags = ((byte >> (t % 8)) & 1) * active
+
+    # token read offsets: prefix sum over [2 | S] encoded byte sizes
+    read_size = jnp.where(active == 1, jnp.where(flags == 1, 2, s), 0)
+    read_off = _prefix_sum_excl(read_size, t, c)
+
+    def pay_at(k):
+        return jnp.take_along_axis(
+            payload, jnp.clip(read_off + k, 0, payload.shape[1] - 1), axis=1
+        )
+
+    ln = jnp.where(flags == 1, pay_at(0), 1) * active
+    off = jnp.where(flags == 1, pay_at(1), 0) * active
+    lit = jnp.zeros((g, c), jnp.int32)
+    for b in range(s):
+        lit = lit + (pay_at(b) << (8 * b))
+    lit = jnp.where(flags == 0, lit, 0)
+
+    out_pos = _prefix_sum_excl(ln, t, c)  # token write starts (symbols)
+
+    # Per-output-symbol token id.  Token starts are strictly increasing over
+    # active tokens (ln >= 1), so the covering token of output position w is
+    # the last token with out_pos <= w: a branchless binary search over the
+    # start positions (inactive tokens get the sentinel c, keeping the row
+    # sorted).  log2(C) gathers — no scatter needed.
+    pos = jnp.where((active == 1) & (ln > 0), out_pos, c)
+    token_id = jnp.zeros((g, c), jnp.int32)
+    for shift in reversed(range(_ceil_log2(c))):
+        probe = token_id + (1 << shift)
+        pv = jnp.take_along_axis(pos, jnp.clip(probe, 0, c - 1), axis=1)
+        token_id = jnp.where((probe <= c - 1) & (pv <= t), probe, token_id)
+
+    flag_w = jnp.take_along_axis(flags, token_id, axis=1)
+    off_w = jnp.take_along_axis(off, token_id, axis=1)
+    lit_w = jnp.take_along_axis(lit, token_id, axis=1)
+    src = jnp.where(flag_w == 1, jnp.clip(t - off_w, 0, c - 1), t)
+    for _ in range(_ceil_log2(c)):
+        src = jnp.take_along_axis(src, src, axis=1)
+    return jnp.take_along_axis(lit_w, src, axis=1)
+
+
+def _decode_kernel(flag_ref, pay_ref, ntok_ref, out_ref, *, symbol_size):
+    out_ref[...] = _decode_values(
+        flag_ref[...], pay_ref[...], ntok_ref[...], symbol_size=symbol_size
+    )
+
+
+def _cost(nc, c, s):
+    lg = _ceil_log2(c)
+    # per position: flag extract + 2 prefix sums + binary search + doubling
+    flops = nc * c * (8 * lg + s + 12)
+    return pl.CostEstimate(
+        flops=flops,
+        bytes_accessed=nc * ((c + 7) // 8 + c * s + 4 + c * 4),
+        transcendentals=0,
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("symbol_size", "chunks_per_block", "interpret")
+)
+def lz_decode_pallas(
+    flag_bytes, payload, n_tokens, *, symbol_size, chunks_per_block=8,
+    interpret=False,
+):
+    """Fused decoder: (nc, C//8) flag bytes + (nc, C*S) payload bytes +
+    (nc,) token counts -> (nc, C) int32 symbols.
+
+    Inputs are the per-chunk aligned sections produced by
+    deflate.gather_section (int-valued; any integer dtype accepted)."""
+    f = flag_bytes.astype(jnp.int32)
+    p = payload.astype(jnp.int32)
+    nt = n_tokens.astype(jnp.int32)
+    nc, cb = f.shape
+    c = cb * 8
+    g = chunks_per_block
+    pad = (-nc) % g
+    if pad:
+        f = jnp.concatenate([f, jnp.zeros((pad, cb), jnp.int32)], axis=0)
+        p = jnp.concatenate([p, jnp.zeros((pad, p.shape[1]), jnp.int32)], axis=0)
+        nt = jnp.concatenate([nt, jnp.zeros((pad,), jnp.int32)], axis=0)
+    npad = nc + pad
+    grid = (npad // g,)
+    out = pl.pallas_call(
+        functools.partial(_decode_kernel, symbol_size=symbol_size),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((g, cb), lambda i: (i, 0)),
+            pl.BlockSpec((g, p.shape[1]), lambda i: (i, 0)),
+            pl.BlockSpec((g,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((g, c), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((npad, c), jnp.int32),
+        cost_estimate=_cost(npad, c, symbol_size),
+        interpret=interpret,
+    )(f, p, nt)
+    return out[:nc]

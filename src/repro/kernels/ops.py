@@ -10,6 +10,7 @@ from __future__ import annotations
 
 import jax
 
+from repro.kernels import lz_decode as _dec_impl
 from repro.kernels import lz_match as _impl
 
 
@@ -38,6 +39,19 @@ def lz_kernel1(symbols, *, window, min_match, symbol_size,
         min_match=min_match,
         symbol_size=symbol_size,
         max_len=max_len,
+        chunks_per_block=chunks_per_block,
+        interpret=_interpret(),
+    )
+
+
+def lz_decode(flag_bytes, payload, n_tokens, *, symbol_size,
+              chunks_per_block=8):
+    """Fused decoder (flag scan + payload gather + copy resolution)."""
+    return _dec_impl.lz_decode_pallas(
+        flag_bytes,
+        payload,
+        n_tokens,
+        symbol_size=symbol_size,
         chunks_per_block=chunks_per_block,
         interpret=_interpret(),
     )

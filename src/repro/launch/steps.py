@@ -20,7 +20,6 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.core import pipeline
 from repro.models import model as model_lib, transformer
 from repro.optim import adamw, grad_compress
 from repro.sharding import rules
@@ -133,10 +132,12 @@ def train_step_compressed(state, batch, *, cfg, traincfg, mesh):
     def pod_grads(mb):
         return _grads_and_metrics(state["params"], cfg, traincfg, mb)
 
-    lz_backend = traincfg.compression.lz_backend
-    if lz_backend == "auto":
-        lz_backend = pipeline.default_backend()
-    lz_cfg = dataclasses.replace(grad_compress.GRAD_LZ, backend=lz_backend)
+    # "auto" backend/decoder resolve per-platform inside the pipeline
+    lz_cfg = dataclasses.replace(
+        grad_compress.GRAD_LZ,
+        backend=traincfg.compression.lz_backend,
+        decoder=traincfg.compression.lz_decoder,
+    )
     batch_pods = jax.tree.map(
         lambda x: x.reshape(n_pods, x.shape[0] // n_pods, *x.shape[1:]), batch
     )

@@ -33,8 +33,9 @@ from jax import lax
 from repro.core import format as fmt, pipeline
 from repro.core.pipeline import LZSSConfig
 
-GRAD_LZ = LZSSConfig(symbol_size=2, window=32, chunk_symbols=2048,
-                     decoder="parallel")
+# decoder defaults to "auto": the in-graph decode dispatches the fused
+# Pallas decoder on TPU, xla-parallel elsewhere (core/pipeline.py registry)
+GRAD_LZ = LZSSConfig(symbol_size=2, window=32, chunk_symbols=2048)
 MIN_COMPRESS_SIZE = 65_536  # leaves below this exchange raw (graph economy)
 
 

@@ -19,10 +19,12 @@ import numpy as np
 
 from repro.core import lzss
 
-# Geometry for KV blocks (S=2 over bf16).  The Kernel-I backend is resolved
-# lazily in KVBlockStore.__init__ — NOT here — so importing this module never
+# Geometry for KV blocks (S=2 over bf16).  backend/decoder stay "auto" —
+# resolved per-platform at dispatch time — so importing this module never
 # initializes the JAX platform as a side effect.
-KV_LZ = lzss.LZSSConfig(symbol_size=2, window=64, chunk_symbols=2048)
+KV_LZ = lzss.LZSSConfig(
+    symbol_size=2, window=64, chunk_symbols=2048, backend="auto"
+)
 
 
 @dataclasses.dataclass
@@ -39,14 +41,19 @@ class BlockStats:
 
 
 class KVBlockStore:
-    """Host-side store of evicted KV blocks, compressed with GPULZ."""
+    """Host-side store of evicted KV blocks, compressed with GPULZ.
 
-    def __init__(self, compress: bool = True, config=None):
+    ``decoder`` overrides the restore-path decode strategy (a decoder
+    registry key; default ``"auto"`` = fused Pallas decoder on TPU) — the
+    batched restores dispatch through ``config.decoder``.
+    """
+
+    def __init__(self, compress: bool = True, config=None, decoder=None):
         self.compress = compress
         if config is None:
-            config = dataclasses.replace(
-                KV_LZ, backend=lzss.default_backend()
-            )
+            config = KV_LZ
+        if decoder is not None:
+            config = dataclasses.replace(config, decoder=decoder)
         self.config = config
         self._store: dict = {}
         self.stats = BlockStats()
@@ -105,7 +112,9 @@ class KVBlockStore:
                 key = (h.symbol_size, h.chunk_symbols, h.n_chunks)
                 groups.setdefault(key, []).append(i)
         for idxs in groups.values():
-            raws = lzss.decompress_many([popped[i][2] for i in idxs])
+            raws = lzss.decompress_many(
+                [popped[i][2] for i in idxs], decoder=self.config.decoder
+            )
             for i, raw in zip(idxs, raws):
                 out[i] = self._reassemble(popped[i][1], raw)
         for i, (codec, meta, payload) in enumerate(popped):

@@ -3,9 +3,12 @@ import sys
 
 # Make `import repro` work without installation (tests run via
 # `PYTHONPATH=src pytest tests/`; this is belt-and-braces for bare pytest).
-_SRC = os.path.join(os.path.dirname(__file__), "..", "src")
-if os.path.abspath(_SRC) not in [os.path.abspath(p) for p in sys.path]:
-    sys.path.insert(0, os.path.abspath(_SRC))
+# The repo root rides along so `import benchmarks.*` resolves for the bench
+# smoke tests (the Makefile targets use PYTHONPATH=src:. the same way).
+_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+for _p in (os.path.join(_ROOT, "src"), _ROOT):
+    if _p not in [os.path.abspath(p) for p in sys.path]:
+        sys.path.insert(0, _p)
 
 # hypothesis is an optional [test] extra (unavailable in the offline CI
 # container): property-based tests live in test_properties.py behind

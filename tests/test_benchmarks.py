@@ -1,0 +1,49 @@
+"""Smoke-exercise the benchmark sweep entry points at tiny sizes.
+
+`make bench-smoke` runs the full CLI drivers; these tests call the sweep
+functions directly so the suite catches API drift (renamed config fields,
+registry keys, JSON schema) without paying interpret-mode compile costs for
+the fused *compressor* (the fused decoder is cheap enough to include).
+"""
+
+import json
+
+import numpy as np
+import pytest
+
+fig9 = pytest.importorskip("benchmarks.fig9_throughput")
+fig10 = pytest.importorskip("benchmarks.fig10_decode")
+
+
+def _tiny_corpus(nbytes=4096):
+    rng = np.random.default_rng(0)
+    half = np.repeat(rng.integers(0, 9, nbytes // 4), 2).astype(np.uint16)
+    return half.view(np.uint8).reshape(-1)[:nbytes]
+
+
+def test_fig9_backend_sweep_smoke(tmp_path):
+    out = tmp_path / "BENCH_pipeline.json"
+    rec = fig9.backend_sweep(
+        _tiny_corpus(), backends=("xla",), sweep_nbytes=2048,
+        out_json=str(out), dataset="smoke",
+    )
+    assert out.exists()
+    disk = json.loads(out.read_text())
+    assert disk["benchmark"] == rec["benchmark"] == "fig9_backend_sweep"
+    assert "xla" in disk["backends"]
+    assert disk["backends"]["xla"]["seconds_per_call"] > 0
+
+
+def test_fig10_decoder_sweep_smoke(tmp_path):
+    out = tmp_path / "BENCH_decode.json"
+    rec = fig10.decoder_sweep(
+        _tiny_corpus(), decoders=("xla-parallel", "fused"),
+        sweep_nbytes=2048, out_json=str(out), dataset="smoke",
+    )
+    assert out.exists()
+    disk = json.loads(out.read_text())
+    assert disk["benchmark"] == rec["benchmark"] == "fig10_decoder_sweep"
+    assert {"xla-parallel", "fused"} <= set(disk["decoders"])
+    assert "fused_over_xla_parallel" in disk
+    for entry in disk["decoders"].values():
+        assert entry["gb_per_s"] > 0

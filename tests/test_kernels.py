@@ -6,7 +6,9 @@ import numpy as np
 import jax.numpy as jnp
 import pytest
 
-from repro.kernels import lz_match as kmod, ref
+from repro.core import decode, deflate
+from repro.core.pipeline import LZSSConfig, get_backend
+from repro.kernels import lz_decode as kdec, lz_match as kmod, ref
 
 
 def _data(nc, c, vocab, seed):
@@ -73,3 +75,58 @@ def test_kernel_grid_padding():
     )
     exp_l, _ = ref.lz_match(syms, window=16)
     np.testing.assert_array_equal(np.asarray(got_l), np.asarray(exp_l))
+
+
+# ------------------------------------------------------- fused decoder
+
+
+def _decode_sections(nc, c, s, seed):
+    """Real per-chunk aligned flag/payload sections via the encode pipeline."""
+    rng = np.random.default_rng(seed)
+    raw = np.repeat(rng.integers(0, 6, nc * c // 2), 2)[: nc * c]
+    syms = jnp.asarray(raw.reshape(nc, c).astype(np.int32))
+    cfg = LZSSConfig(symbol_size=s, window=16, chunk_symbols=c)
+    k1 = get_backend("xla").kernel1(syms, cfg)
+    flag_bytes, _ = deflate.pack_flags(
+        k1["emitted"], k1["use_match"], n_tokens=k1["n_tokens"]
+    )
+    payload = deflate.build_chunk_payloads(
+        syms, k1["lengths"], k1["offsets"], k1, symbol_size=s
+    )
+    return flag_bytes, payload, k1["n_tokens"], syms
+
+
+@pytest.mark.parametrize("s", [1, 2, 4])
+@pytest.mark.parametrize("c", [64, 128])
+@pytest.mark.parametrize("g", [2, 8])
+def test_decode_kernel_sweep(s, c, g):
+    fb, pay, ntok, syms = _decode_sections(5, c, s, seed=s * c + g)
+    got = kdec.lz_decode_pallas(
+        fb, pay, ntok, symbol_size=s, chunks_per_block=g, interpret=True
+    )
+    exp = decode.decode_parallel(fb, pay, ntok, symbol_size=s)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(exp))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(syms))
+
+
+def test_decode_kernel_non_pow2_chunk_and_padding():
+    """C not a power of two + nc not divisible by chunks_per_block."""
+    fb, pay, ntok, syms = _decode_sections(3, 72, 2, seed=9)
+    got = kdec.lz_decode_pallas(
+        fb, pay, ntok, symbol_size=2, chunks_per_block=8, interpret=True
+    )
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(syms))
+
+
+def test_decode_kernel_empty_and_full_chunks():
+    """All-zero chunks (max matches) and token counts of zero decode cleanly."""
+    fb, pay, ntok, syms = _decode_sections(2, 64, 1, seed=1)
+    # zero out the second chunk's tokens: kernel must emit zero symbols
+    ntok = ntok.at[1].set(0)
+    fb = fb.at[1].set(0)
+    pay = pay.at[1].set(0)
+    got = kdec.lz_decode_pallas(
+        fb, pay, ntok, symbol_size=1, chunks_per_block=2, interpret=True
+    )
+    np.testing.assert_array_equal(np.asarray(got)[0], np.asarray(syms)[0])
+    np.testing.assert_array_equal(np.asarray(got)[1], np.zeros(64, np.int32))

@@ -55,6 +55,17 @@ def test_backends_identical_property(vals):
         np.testing.assert_array_equal(results[0], other)
 
 
+@given(st.lists(st.integers(0, 3), min_size=1, max_size=400))
+def test_decoders_identical_property(vals):
+    """Every registered decoder reconstructs the original bytes exactly."""
+    arr = np.array(vals, np.uint8)
+    cfg = lzss.LZSSConfig(symbol_size=1, window=16, chunk_symbols=64)
+    res = lzss.compress(arr, cfg)
+    for decoder in lzss.available_decoders():
+        out = lzss.decompress(res.data, decoder=decoder)
+        np.testing.assert_array_equal(out, arr, err_msg=f"decoder {decoder}")
+
+
 @given(
     st.lists(st.integers(0, 4), min_size=16, max_size=128),
     st.sampled_from([4, 16, 64]),
