@@ -2,10 +2,15 @@
 # `repro` is importable either via `pip install -e .` (pyproject.toml) or via
 # PYTHONPATH=src — the targets below use the latter so they work in the
 # offline CI container without an install step.
+#
+# CI (.github/workflows/ci.yml) runs: test-fast + bench-smoke + check-bench
+# on a Python 3.10/3.11 matrix, and `ruff check` / `ruff format --check` as
+# a separate lint job.
 
 PY ?= python
 
-.PHONY: test test-fast bench-pipeline bench-decode bench-smoke bench
+.PHONY: test test-fast check-bench lint \
+	bench-pipeline bench-decode bench-smoke bench
 
 test:
 	PYTHONPATH=src $(PY) -m pytest -x -q
@@ -13,8 +18,18 @@ test:
 test-fast:
 	PYTHONPATH=src $(PY) -m pytest -x -q -m "not slow"
 
+# Schema-validate the tracked BENCH_*.json perf records (catches a smoke run
+# accidentally written to the repo root before it clobbers the trajectory).
+check-bench:
+	PYTHONPATH=src $(PY) -m pytest -q tests/test_benchmarks.py -k artifact_schema
+
+# Mirrors the CI lint job (requires ruff: pip install -e .[lint]).
+lint:
+	ruff check src tests benchmarks
+	ruff format --check src/repro/kernels
+
 bench-pipeline:
-	PYTHONPATH=src:. $(PY) benchmarks/fig9_throughput.py --backend fused
+	PYTHONPATH=src:. $(PY) benchmarks/fig9_throughput.py --backend fused-deflate
 
 bench-decode:
 	PYTHONPATH=src:. $(PY) benchmarks/fig10_decode.py --decoder fused

@@ -8,11 +8,12 @@ Fig. 4a), vs `gpulz` = fully in-graph Kernel I-III (their Fig. 4d).  Both run
 on this container's CPU, so the RATIO of the two numbers is the
 reproduction; absolute GB/s for TPU comes from §Roofline.
 
-``--backend`` additionally sweeps the pipeline's Kernel-I backends (xla
-baseline vs fused Pallas Kernel I) and records both in BENCH_pipeline.json —
-the perf trajectory of the backend refactor (see EXPERIMENTS.md §Pipeline).
-On CPU the fused backend runs the kernel in interpret mode, so its absolute
-number is NOT meaningful off-TPU; the JSON tags the platform."""
+``--backend`` additionally sweeps the pipeline backends (xla baseline vs
+fused Pallas Kernel I vs the fully fused ``fused-deflate`` emit path) and
+records them in BENCH_pipeline.json — the perf trajectory of the backend
+refactors (see EXPERIMENTS.md §Pipeline).  On CPU the fused backends run
+their kernels in interpret mode, so their absolute numbers are NOT
+meaningful off-TPU; the JSON tags the platform."""
 
 from __future__ import annotations
 
@@ -30,7 +31,6 @@ def culzss_workflow_seconds(data: np.ndarray, window=128, c=2048) -> float:
     """GPU-matching + host sequential encode (CULZSS structure)."""
     import time
 
-    cfg = lzss.LZSSConfig(symbol_size=1, window=window, chunk_symbols=c)
     n = data.size
     nc = -(-n // c)
     padded = np.zeros(nc * c, np.uint8)
@@ -58,7 +58,7 @@ def culzss_workflow_seconds(data: np.ndarray, window=128, c=2048) -> float:
 
 def backend_sweep(
     data: np.ndarray,
-    backends=("xla", "fused"),
+    backends=("xla", "fused", "fused-deflate"),
     sweep_nbytes: int = 1 << 16,
     out_json: str = "BENCH_pipeline.json",
     dataset: str = "hurr-quant",
@@ -90,11 +90,16 @@ def backend_sweep(
         "interpret_mode": jax.default_backend() != "tpu",
         "backends": results,
     }
-    if "xla" in results and "fused" in results:
-        record["fused_over_xla"] = (
-            results["xla"]["seconds_per_call"]
-            / max(results["fused"]["seconds_per_call"], 1e-12)
-        )
+    # per-backend speedup vs the unfused xla baseline ("fused_over_xla",
+    # "fused_deflate_over_xla", ...) — the trajectory the JSON exists for
+    if "xla" in results:
+        for key, entry in results.items():
+            if key == "xla":
+                continue
+            record[f"{key.replace('-', '_')}_over_xla"] = (
+                results["xla"]["seconds_per_call"]
+                / max(entry["seconds_per_call"], 1e-12)
+            )
     with open(out_json, "w") as f:
         json.dump(record, f, indent=2)
     print(f"# wrote {out_json}")
@@ -102,7 +107,7 @@ def backend_sweep(
 
 
 def run(nbytes: int = 1 << 20, dataset: str = "hurr-quant",
-        backend: str = "fused", sweep_nbytes: int = 1 << 16,
+        backend: str = "fused-deflate", sweep_nbytes: int = 1 << 16,
         out_json: str = "BENCH_pipeline.json"):
     print("# fig9: name,us_per_call,GB/s")
     data = datasets.load(dataset, nbytes)
@@ -124,9 +129,15 @@ def run(nbytes: int = 1 << 20, dataset: str = "hurr-quant",
     emit(f"fig9/{dataset}/speedup-vs-culzss", 0.0,
          f"{t_culzss / t_gpulz:.1f}x|paper=22.2x-avg")
 
-    # pipeline backend sweep: always include the xla baseline so the JSON
-    # records both sides of the comparison
-    backends = ("xla",) if backend == "xla" else ("xla", backend)
+    # pipeline backend sweep: always include the xla baseline (and the
+    # Kernel-I-only fused backend when sweeping fused-deflate, so the JSON
+    # separates the Kernel-I win from the Kernel-II/III fusion win)
+    if backend == "xla":
+        backends = ("xla",)
+    elif backend == "fused-deflate":
+        backends = ("xla", "fused", "fused-deflate")
+    else:
+        backends = ("xla", backend)
     backend_sweep(data, backends=backends, sweep_nbytes=sweep_nbytes,
                   out_json=out_json, dataset=dataset)
 
@@ -137,7 +148,7 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--nbytes", type=int, default=1 << 20)
     ap.add_argument("--dataset", default="hurr-quant")
-    ap.add_argument("--backend", default="fused",
+    ap.add_argument("--backend", default="fused-deflate",
                     choices=sorted(lzss.available_backends()),
                     help="pipeline backend to sweep against the xla baseline")
     ap.add_argument("--sweep-nbytes", type=int, default=1 << 16,

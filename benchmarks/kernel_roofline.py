@@ -18,7 +18,6 @@ fused-vs-unfused comparison (paper Fig. 4 (c) vs (d)) quantitatively.
 
 from __future__ import annotations
 
-import numpy as np
 
 from benchmarks.common import emit
 
@@ -61,7 +60,6 @@ def analytic(run_xla_comparison: bool = True):
 
     nc, c = 64, 2048
     cfg = lzss.LZSSConfig(symbol_size=2, window=64, chunk_symbols=c)
-    syms = jnp.zeros((nc, c), jnp.int32)
     lowered = jax.jit(
         lambda x: lzss.compress_chunks(x, cfg)
     ).lower(jax.ShapeDtypeStruct((nc, c), jnp.int32))

@@ -4,7 +4,6 @@ last column for calibration (surrogates match character, not bytes)."""
 
 from __future__ import annotations
 
-import numpy as np
 
 from benchmarks.common import emit, time_fn
 from repro.core import lzss

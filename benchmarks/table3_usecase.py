@@ -15,7 +15,6 @@ import jax.numpy as jnp
 from benchmarks.common import emit, throughput_gbs, time_fn
 from benchmarks.huffman import huffman_compressed_bytes
 from repro.core import lzss, quant
-from repro.data import datasets
 
 PAPER = {  # (cusz CR, cusz+gpulz CR)
     "cesm-like": (22.6, 43.2), "hurr-like": (24.3, 29.1),

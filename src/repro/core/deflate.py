@@ -17,7 +17,6 @@ with masked ('drop'-mode) scatters, the JAX analogue of bounds-checked writes.
 from __future__ import annotations
 
 import jax.numpy as jnp
-from jax import lax
 
 
 def pack_flags(emitted, use_match, n_tokens=None):

@@ -3,8 +3,10 @@
     matching -> local prefix sum -> encoding -> global prefix sum -> deflating
     `------------- Kernel I -------------'    `-- Kernel II --'   `Kernel III'
 
-Kernel-I execution is pluggable (core/pipeline.py): ``LZSSConfig(backend=...)``
-selects between the unfused XLA reference path and the fused Pallas kernel.
+The pipeline is pluggable (core/pipeline.py): ``LZSSConfig(backend=...)``
+selects the Kernel-I strategy AND the emit tail — ``fused-deflate`` (the TPU
+``"auto"`` default) runs fused Pallas kernels for the whole chain, from
+matching through the Kernel-III deflate-scatter.
 ``compress_chunks`` / ``compress_many_chunks`` are the fully jittable cores
 (fixed shapes, usable in-graph for gradient/KV compression); ``compress`` /
 ``decompress`` and ``compress_many`` / ``decompress_many`` are host-facing

@@ -23,19 +23,33 @@ VMEM.  This module makes that choice a *backend*:
     the backend + tail), which is what the gradient/KV/checkpoint consumers
     need instead of per-array host loops.
 
+A backend may also own the *emit* tail (Kernel II global prefix sums +
+Kernel III deflate-scatter) by providing an optional ``emit`` method; the
+default is the shared XLA tail ``emit_xla``.  This keeps new execution
+strategies registry entries rather than ``if``-ladders in
+``compress_chunks``.
+
 Registered backends:
 
-  ``xla``          unfused reference path (workflow (c)): XLA matching, the
-                   beyond-paper pointer-doubling selector, XLA prefix sums.
-  ``xla-scan``     same but with the paper-faithful sequential selection walk
-                   (lax.scan) — the equivalence oracle.
-  ``pallas-match`` Pallas matching kernel, XLA select + prefix sums (the old
-                   ``matcher="pallas"`` switch).
-  ``fused``        the paper's headline configuration (workflow (d)): the
-                   fused Pallas Kernel I (kernels/lz_match.py) produces
-                   lengths/offsets/emitted/local_off/payload_sizes/n_tokens
-                   in one VMEM-resident kernel; the redundant XLA selection
-                   and local prefix sum are skipped entirely.
+  ``xla``           unfused reference path (workflow (c)): XLA matching, the
+                    beyond-paper pointer-doubling selector, XLA prefix sums.
+  ``xla-scan``      same but with the paper-faithful sequential selection
+                    walk (lax.scan) — the equivalence oracle.
+  ``pallas-match``  Pallas matching kernel, XLA select + prefix sums (the
+                    old ``matcher="pallas"`` switch).
+  ``fused``         the fused Pallas Kernel I (kernels/lz_match.py) produces
+                    lengths/offsets/emitted/local_off/payload_sizes/n_tokens
+                    in one VMEM-resident kernel; the redundant XLA selection
+                    and local prefix sum are skipped entirely.  The emit
+                    tail stays XLA.
+  ``fused-deflate`` the paper's headline configuration (workflow (d)) end to
+                    end: fused Kernel I plus a fused Kernel II+III
+                    (kernels/lz_scatter.py) — one kernel computes both
+                    global exclusive prefix sums, a second rebuilds the
+                    flag/payload sections in VMEM and scatters them into the
+                    blob via scalar-prefetched per-chunk offsets.  The
+                    aligned (nc, C//8)/(nc, C*S) section arrays never
+                    materialize in HBM.
 
 Decompression mirrors the same design: ``DecoderBackend`` is the decode-side
 contract (per-chunk aligned flag/payload sections -> symbols), with its own
@@ -54,11 +68,11 @@ xla-parallel elsewhere — resolved at dispatch, like ``default_backend()``)
 or the legacy aliases ``"parallel"``/``"scan"``, which are normalized to
 registry keys at construction.
 
-On TPU ``fused`` is the default hot path; elsewhere the kernels execute in
-interpret mode, so the default stays ``xla`` (identical bytes, no interpreter
-overhead).  All backends produce byte-identical containers and all decoders
-identical symbols — property- and sweep-tested in tests/test_pipeline.py and
-tests/test_decoders.py.
+On TPU ``fused-deflate`` is the default hot path; elsewhere the kernels
+execute in interpret mode, so the default stays ``xla`` (identical bytes, no
+interpreter overhead).  All backends produce byte-identical containers and
+all decoders identical symbols — property- and sweep-tested in
+tests/test_pipeline.py and tests/test_decoders.py.
 """
 
 from __future__ import annotations
@@ -78,7 +92,7 @@ from repro.core import deflate, encode, format as fmt, match
 
 def default_backend() -> str:
     """The preferred compressor backend for the current accelerator."""
-    return "fused" if jax.default_backend() == "tpu" else "xla"
+    return "fused-deflate" if jax.default_backend() == "tpu" else "xla"
 
 
 def default_decoder() -> str:
@@ -145,6 +159,12 @@ class CompressorBackend(Protocol):
       local_off          (nc, C) int32  exclusive prefix sum of sizes
       payload_sizes      (nc,)   int32  compressed payload bytes per chunk
       n_tokens           (nc,)   int32  tokens per chunk (= flag bits)
+
+    A backend may additionally define ``emit(symbols, k1, cfg, orig_bytes)``
+    -> ``(buffer u8[cap], total_bytes)`` to own the Kernel-II/III tail
+    (global prefix sums + deflate-scatter + header); ``compress_chunks``
+    falls back to the shared XLA tail ``emit_xla`` when absent, so
+    Kernel-I-only backends keep working unchanged.
     """
 
     name: str
@@ -157,14 +177,23 @@ Kernel1Result = Dict[str, jnp.ndarray]
 _BACKENDS: Dict[str, CompressorBackend] = {}
 
 
-def register_backend(backend: CompressorBackend) -> CompressorBackend:
-    """Register a backend *instance* under ``backend.name`` (latest wins).
+def register_backend(
+    backend: CompressorBackend, *, overwrite: bool = False
+) -> CompressorBackend:
+    """Register a backend *instance* under ``backend.name``.
 
-    Caveat: ``compress_chunks`` jit-caches on the config (which carries only
-    the backend *name*), so re-registering an existing name does not
-    invalidate already-traced calls — call ``jax.clear_caches()`` after
-    replacing a backend in place, or register under a fresh name.
+    Duplicate names raise unless ``overwrite=True`` — silently replacing a
+    registered backend was an easy way to corrupt a pipeline another module
+    had already configured.  Caveat when overwriting: ``compress_chunks``
+    jit-caches on the config (which carries only the backend *name*), so
+    replacing a backend in place does not invalidate already-traced calls —
+    call ``jax.clear_caches()`` after, or register under a fresh name.
     """
+    if backend.name in _BACKENDS and not overwrite:
+        raise ValueError(
+            f"backend {backend.name!r} already registered; "
+            f"pass overwrite=True to replace it"
+        )
     _BACKENDS[backend.name] = backend
     return backend
 
@@ -172,8 +201,9 @@ def register_backend(backend: CompressorBackend) -> CompressorBackend:
 def resolve_backend(name: str) -> str:
     """Normalize a backend selector to a registered key.
 
-    Accepts registry keys and ``auto`` (fused Pallas Kernel I on TPU, xla
-    elsewhere) — the compress-side mirror of ``resolve_decoder``.
+    Accepts registry keys and ``auto`` (the fully fused ``fused-deflate``
+    pipeline on TPU, xla elsewhere) — the compress-side mirror of
+    ``resolve_decoder``.
     """
     if name == "auto":
         name = default_backend()
@@ -242,10 +272,10 @@ class PallasMatchBackend(_XlaBackendBase):
 
 
 class FusedBackend:
-    """Fused Pallas Kernel I (workflow (d)): selection and the local prefix
-    sum stay in VMEM with the match intermediates; only the final token
-    metadata is written back.  Skips ``encode.select_tokens_*`` and the
-    cumsum in ``encode.token_fields`` entirely."""
+    """Fused Pallas Kernel I: selection and the local prefix sum stay in
+    VMEM with the match intermediates; only the final token metadata is
+    written back.  Skips ``encode.select_tokens_*`` and the cumsum in
+    ``encode.token_fields`` entirely.  The emit tail stays XLA."""
 
     name = "fused"
 
@@ -266,10 +296,44 @@ class FusedBackend:
         return dict(out, use_match=use_match, sizes=sizes)
 
 
+class FusedDeflateBackend(FusedBackend):
+    """Workflow (d) end to end: fused Kernel I plus the fused Kernel II+III
+    (kernels/lz_scatter.py).  One kernel computes both global exclusive
+    prefix sums; a second rebuilds the flag/payload sections in VMEM per
+    chunk block and scatters each chunk's compact prefix into the blob at
+    scalar-prefetched per-chunk offsets — the aligned (nc, C//8)/(nc, C*S)
+    section arrays of the XLA tail never materialize in HBM."""
+
+    name = "fused-deflate"
+
+    def emit(self, symbols, k1, cfg, orig_bytes=None):
+        from repro.kernels import ops  # lazy: kernels are optional at import
+
+        nc, c = symbols.shape
+        s = cfg.symbol_size
+        out, flag_total, pay_total = ops.lz_scatter(
+            symbols,
+            k1["lengths"],
+            k1["offsets"],
+            k1["emitted"],
+            k1["use_match"],
+            k1["local_off"],
+            k1["n_tokens"],
+            k1["payload_sizes"],
+            symbol_size=s,
+            cap=fmt.max_compressed_bytes(nc * c * s, s, c),
+            sec_flags=fmt.HEADER_BYTES + 8 * nc,
+        )
+        return _finalize_container(
+            out, k1, cfg, orig_bytes, flag_total=flag_total, pay_total=pay_total
+        )
+
+
 register_backend(XlaBackend())
 register_backend(XlaScanBackend())
 register_backend(PallasMatchBackend())
 register_backend(FusedBackend())
+register_backend(FusedDeflateBackend())
 
 
 # ------------------------------------------------------------- decoders
@@ -297,13 +361,22 @@ _DECODERS: Dict[str, DecoderBackend] = {}
 _DECODER_ALIASES = {"parallel": "xla-parallel", "scan": "xla-scan"}
 
 
-def register_decoder(decoder: DecoderBackend) -> DecoderBackend:
-    """Register a decoder *instance* under ``decoder.name`` (latest wins).
+def register_decoder(
+    decoder: DecoderBackend, *, overwrite: bool = False
+) -> DecoderBackend:
+    """Register a decoder *instance* under ``decoder.name``.
 
-    Same jit-cache caveat as ``register_backend``: ``decompress_chunks``
-    caches on the decoder *name*, so replacing a registered decoder in place
-    requires ``jax.clear_caches()`` (or a fresh name).
+    Duplicate names raise unless ``overwrite=True``, mirroring
+    ``register_backend``.  Same jit-cache caveat when overwriting:
+    ``decompress_chunks`` caches on the decoder *name*, so replacing a
+    registered decoder in place requires ``jax.clear_caches()`` (or a
+    fresh name).
     """
+    if decoder.name in _DECODERS and not overwrite:
+        raise ValueError(
+            f"decoder {decoder.name!r} already registered; "
+            f"pass overwrite=True to replace it"
+        )
     _DECODERS[decoder.name] = decoder
     return decoder
 
@@ -398,29 +471,16 @@ def unpack_symbols(symbols: jnp.ndarray, symbol_size: int) -> jnp.ndarray:
 # ------------------------------------------------------- jittable cores
 
 
-@functools.partial(jax.jit, static_argnames=("cfg",))
-def compress_chunks(symbols: jnp.ndarray, cfg: LZSSConfig, orig_bytes=None):
-    """Jittable core: (nc, C) int32 symbols -> (buffer u8[cap], total_bytes).
+def _finalize_container(out, k1, cfg, orig_bytes, *, flag_total, pay_total):
+    """Write header + A/B tables into a section-filled byte buffer.
 
-    The buffer holds a complete container (header + tables + flags + payload);
-    bytes past ``total_bytes`` are zero.  ``orig_bytes`` (scalar, may be
-    traced) is the true pre-padding byte count recorded in the header; when
-    omitted the padded size ``nc * C * S`` is recorded.
+    ``out`` is a (cap,) int32 buffer whose flag/payload sections are already
+    in place and whose header/table region [0, HEADER_BYTES + 8*nc) is still
+    zero — both emit tails produce exactly that.  Returns the finished
+    ``(buffer u8, total_bytes)``.
     """
-    nc, c = symbols.shape
+    nc, c = k1["lengths"].shape
     s = cfg.symbol_size
-    k1 = get_backend(cfg.backend).kernel1(symbols, cfg)
-    flag_bytes, flag_sizes = deflate.pack_flags(
-        k1["emitted"], k1["use_match"], n_tokens=k1["n_tokens"]
-    )
-    payload = deflate.build_chunk_payloads(
-        symbols, k1["lengths"], k1["offsets"], k1, symbol_size=s
-    )
-    pay_off, pay_total, flag_off, flag_total = deflate.global_offsets(
-        k1["payload_sizes"], flag_sizes
-    )
-    cap = fmt.max_compressed_bytes(nc * c * s, s, c)
-    out = jnp.zeros((cap,), jnp.int32)
     out = fmt.write_header_and_tables(
         out,
         symbol_size=s,
@@ -433,13 +493,60 @@ def compress_chunks(symbols: jnp.ndarray, cfg: LZSSConfig, orig_bytes=None):
         n_tokens=k1["n_tokens"],
         payload_sizes=k1["payload_sizes"],
     )
+    total = fmt.HEADER_BYTES + 8 * nc + flag_total + pay_total
+    return out.astype(jnp.uint8), total
+
+
+def emit_xla(symbols, k1, cfg, orig_bytes=None):
+    """Shared workflow-(c) emit tail: Kernels II+III as separate XLA ops.
+
+    Packs flags and builds per-chunk payload buffers in HBM
+    (``deflate.pack_flags`` / ``build_chunk_payloads``), runs the two global
+    exclusive prefix sums (``deflate.global_offsets``, Kernel II), and
+    scatters both sections into the container (``deflate.scatter_section``,
+    Kernel III).  Backends without their own ``emit`` use this tail.
+    """
+    nc, c = symbols.shape
+    s = cfg.symbol_size
+    flag_bytes, flag_sizes = deflate.pack_flags(
+        k1["emitted"], k1["use_match"], n_tokens=k1["n_tokens"]
+    )
+    payload = deflate.build_chunk_payloads(
+        symbols, k1["lengths"], k1["offsets"], k1, symbol_size=s
+    )
+    pay_off, pay_total, flag_off, flag_total = deflate.global_offsets(
+        k1["payload_sizes"], flag_sizes
+    )
+    cap = fmt.max_compressed_bytes(nc * c * s, s, c)
     sec_flags = fmt.HEADER_BYTES + 8 * nc
+    out = jnp.zeros((cap,), jnp.int32)
     out = deflate.scatter_section(out, sec_flags, flag_bytes, flag_sizes, flag_off)
     out = deflate.scatter_section(
         out, sec_flags + flag_total, payload, k1["payload_sizes"], pay_off
     )
-    total = sec_flags + flag_total + pay_total
-    return out.astype(jnp.uint8), total
+    return _finalize_container(
+        out, k1, cfg, orig_bytes, flag_total=flag_total, pay_total=pay_total
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def compress_chunks(symbols: jnp.ndarray, cfg: LZSSConfig, orig_bytes=None):
+    """Jittable core: (nc, C) int32 symbols -> (buffer u8[cap], total_bytes).
+
+    The buffer holds a complete container (header + tables + flags + payload);
+    bytes past ``total_bytes`` are zero.  ``orig_bytes`` (scalar, may be
+    traced) is the true pre-padding byte count recorded in the header; when
+    omitted the padded size ``nc * C * S`` is recorded.
+
+    Both pipeline stages dispatch through the backend registry: Kernel I via
+    ``backend.kernel1`` and the emit tail (Kernels II+III + header) via the
+    backend's optional ``emit`` method, defaulting to the shared XLA tail
+    ``emit_xla``.
+    """
+    backend = get_backend(cfg.backend)
+    k1 = backend.kernel1(symbols, cfg)
+    emit = getattr(backend, "emit", emit_xla)
+    return emit(symbols, k1, cfg, orig_bytes)
 
 
 @functools.partial(

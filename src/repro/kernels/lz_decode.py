@@ -57,6 +57,23 @@ def _prefix_sum_excl(x, idx, c):
     return incl - x
 
 
+def _search_last_le(sorted_rows, queries, n):
+    """res[., q] = last index i in [0, n) with sorted_rows[., i] <= queries[., q].
+
+    Branchless binary search over a nondecreasing row (log2 n gathers —
+    the gather-friendly replacement for scatter+cumsum fills, which have no
+    efficient Mosaic lowering).  Defaults to 0 when every element exceeds
+    the query; callers mask those lanes.  Shared by the decode kernel's
+    token-id fill and the deflate-scatter kernel's rank/offset searches.
+    """
+    res = jnp.zeros_like(queries)
+    for shift in reversed(range(_ceil_log2(n))):
+        probe = res + (1 << shift)
+        pv = jnp.take_along_axis(sorted_rows, jnp.clip(probe, 0, n - 1), axis=1)
+        res = jnp.where((probe <= n - 1) & (pv <= queries), probe, res)
+    return res
+
+
 def _decode_values(flag_bytes, payload, n_tokens, *, symbol_size):
     """(G, cb) flags + (G, C*S) payload + (G,) counts -> (G, C) symbols."""
     g, cb = flag_bytes.shape
@@ -88,15 +105,10 @@ def _decode_values(flag_bytes, payload, n_tokens, *, symbol_size):
 
     # Per-output-symbol token id.  Token starts are strictly increasing over
     # active tokens (ln >= 1), so the covering token of output position w is
-    # the last token with out_pos <= w: a branchless binary search over the
-    # start positions (inactive tokens get the sentinel c, keeping the row
-    # sorted).  log2(C) gathers — no scatter needed.
+    # the last token with out_pos <= w (inactive tokens get the sentinel c,
+    # keeping the row sorted).
     pos = jnp.where((active == 1) & (ln > 0), out_pos, c)
-    token_id = jnp.zeros((g, c), jnp.int32)
-    for shift in reversed(range(_ceil_log2(c))):
-        probe = token_id + (1 << shift)
-        pv = jnp.take_along_axis(pos, jnp.clip(probe, 0, c - 1), axis=1)
-        token_id = jnp.where((probe <= c - 1) & (pv <= t), probe, token_id)
+    token_id = _search_last_le(pos, t, c)
 
     flag_w = jnp.take_along_axis(flags, token_id, axis=1)
     off_w = jnp.take_along_axis(off, token_id, axis=1)
@@ -128,7 +140,12 @@ def _cost(nc, c, s):
     jax.jit, static_argnames=("symbol_size", "chunks_per_block", "interpret")
 )
 def lz_decode_pallas(
-    flag_bytes, payload, n_tokens, *, symbol_size, chunks_per_block=8,
+    flag_bytes,
+    payload,
+    n_tokens,
+    *,
+    symbol_size,
+    chunks_per_block=8,
     interpret=False,
 ):
     """Fused decoder: (nc, C//8) flag bytes + (nc, C*S) payload bytes +

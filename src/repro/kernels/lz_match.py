@@ -68,9 +68,7 @@ def _match_values(x, *, window, max_len):
             r = eq
             for k in range(levels):
                 stride = 1 << k
-                r = r + jnp.where(
-                    r == stride, _shift_left_zero(r, stride, idx, c), 0
-                )
+                r = r + jnp.where(r == stride, _shift_left_zero(r, stride, idx, c), 0)
             cand = jnp.minimum(r, jnp.minimum(d, max_len))
             return jnp.maximum(best, cand * pack + d)
 
@@ -96,8 +94,18 @@ def _match_kernel(x_ref, len_ref, off_ref, *, window, max_len):
 
 
 def _fused_kernel(
-    x_ref, len_ref, off_ref, emit_ref, lo_ref, paysz_ref, ntok_ref,
-    *, window, max_len, min_match, symbol_size,
+    x_ref,
+    len_ref,
+    off_ref,
+    emit_ref,
+    lo_ref,
+    paysz_ref,
+    ntok_ref,
+    *,
+    window,
+    max_len,
+    min_match,
+    symbol_size,
 ):
     g, c = x_ref.shape
     lengths, offsets = _match_values(x_ref[...], window=window, max_len=max_len)
@@ -110,9 +118,7 @@ def _fused_kernel(
         len_i = pl.load(len_ref, (slice(None), pl.dslice(i, 1)))
         emit = next_pos == i
         step = jnp.where(len_i >= min_match, len_i, 1)
-        pl.store(
-            emit_ref, (slice(None), pl.dslice(i, 1)), emit.astype(jnp.int32)
-        )
+        pl.store(emit_ref, (slice(None), pl.dslice(i, 1)), emit.astype(jnp.int32))
         return jnp.where(emit, i + step, next_pos)
 
     lax.fori_loop(0, c, body, jnp.zeros((g, 1), jnp.int32))
@@ -120,9 +126,9 @@ def _fused_kernel(
     # --- local prefix sum (paper's up/down-sweep == lane-shift doubling) ---
     emitted = emit_ref[...] == 1
     use_match = emitted & (lengths >= min_match)
-    sizes = jnp.where(
-        emitted, jnp.where(use_match, 2, symbol_size), 0
-    ).astype(jnp.int32)
+    sizes = jnp.where(emitted, jnp.where(use_match, 2, symbol_size), 0).astype(
+        jnp.int32
+    )
     idx = lax.broadcasted_iota(jnp.int32, (g, c), 1)
     incl = sizes
     ntok = emitted.astype(jnp.int32)
@@ -185,13 +191,23 @@ def lz_match_pallas(
 @functools.partial(
     jax.jit,
     static_argnames=(
-        "window", "max_len", "min_match", "symbol_size",
-        "chunks_per_block", "interpret",
+        "window",
+        "max_len",
+        "min_match",
+        "symbol_size",
+        "chunks_per_block",
+        "interpret",
     ),
 )
 def lz_kernel1_pallas(
-    symbols, *, window, min_match, symbol_size,
-    max_len=MAX_LEN_CAP, chunks_per_block=8, interpret=False,
+    symbols,
+    *,
+    window,
+    min_match,
+    symbol_size,
+    max_len=MAX_LEN_CAP,
+    chunks_per_block=8,
+    interpret=False,
 ):
     """Fused Kernel I: -> dict(lengths, offsets, emitted, local_off,
     payload_sizes, n_tokens), shapes (nc, C) / (nc,)."""

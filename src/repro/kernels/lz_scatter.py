@@ -1,0 +1,293 @@
+"""Pallas TPU kernels for fused GPULZ deflating (Kernels II+III).
+
+After Kernel I, the XLA pipeline tail still stages every intermediate
+through HBM as separate ops (the paper's workflow (c)):
+``deflate.pack_flags`` and ``deflate.build_chunk_payloads`` materialize the
+(nc, C//8) flag and (nc, C*S) payload sections, ``deflate.global_offsets``
+runs two XLA cumsums (Kernel II), and ``deflate.scatter_section`` re-reads
+both sections to assemble the blob (Kernel III).  This module fuses that
+whole emit path (workflow (d); cf. the stream-compaction lesson of
+Sitaridi et al., *Massively-Parallel Lossless Data Decompression*): the
+compressed sections are rebuilt in VMEM per chunk block straight from the
+Kernel-I outputs and written to the output blob exactly once — the aligned
+(nc, C//8) / (nc, C*S) section arrays never exist in HBM.
+
+Two passes, mirroring the paper's Kernel II -> III split:
+
+  pass 1 (``_offsets_kernel``)   ONE kernel computes BOTH exclusive prefix
+      sums over the per-chunk flag/payload sizes (the paper calls CUB
+      ``DeviceScan::ExclusiveSum`` twice) via lane-shift doubling, plus the
+      two section totals; payload offsets come out pre-based past the flag
+      section so pass 2 needs no extra scalar math.
+  pass 2 (``_scatter_kernel``)   per chunk block, rebuilds the flag bytes
+      and payload bytes in VMEM from the Kernel-I arrays (a rank->position
+      binary search — the gather-friendly inverse of ``pack_flags``'s
+      scatter-add, which has no efficient Mosaic lowering) and blends each
+      chunk's compact prefix into the output blob at its global offset.
+      The per-chunk offsets ride in as scalar-prefetch operands
+      (``pltpu.PrefetchScalarGridSpec``), so every dynamic store address is
+      an SMEM scalar read; the blob block is revisited across the grid and
+      written back to HBM once.
+
+Like the other kernels, correctness is validated in interpret mode against
+the XLA tail (tests/test_kernels.py); byte-identity of full containers is
+enforced by tests/test_pipeline.py.  Real-TPU caveats (VMEM residency of
+the whole blob, Mosaic dynamic-lane-slice lowering) are tracked in
+ROADMAP.md.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.lz_decode import _ceil_log2, _prefix_sum_excl, _search_last_le
+
+
+# ---------------------------------------------------- pass 1: Kernel II
+
+
+def _offsets_kernel(nt_ref, ps_ref, fo_ref, po_ref, tot_ref, *, nc):
+    _, n = nt_ref.shape
+    idx = lax.broadcasted_iota(jnp.int32, (1, n), 1)
+    fs = (nt_ref[...] + 7) // 8
+    ps = ps_ref[...]
+    f_excl = _prefix_sum_excl(fs, idx, n)
+    p_excl = _prefix_sum_excl(ps, idx, n)
+    f_tot = f_excl[0, nc - 1] + fs[0, nc - 1]
+    p_tot = p_excl[0, nc - 1] + ps[0, nc - 1]
+    fo_ref[...] = f_excl
+    # payload offsets pre-based past the flag section
+    po_ref[...] = p_excl + f_tot
+    tot_ref[...] = jnp.where(idx == 0, f_tot, jnp.where(idx == 1, p_tot, 0))
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def lz_global_offsets_pallas(n_tokens, payload_sizes, *, interpret=False):
+    """Fused Kernel II: (nc,) per-chunk sizes -> global section offsets.
+
+    Returns ``(flag_off, pay_off, flag_total, pay_total)``: both exclusive
+    prefix sums computed in ONE kernel (flag sizes are derived from
+    ``n_tokens`` in-kernel); ``pay_off`` is pre-based past the flag section
+    (``flag_total + excl_cumsum(payload_sizes)``).  The offset vectors come
+    back at the kernel's 128-lane padding (>= nc); a consumer indexing past
+    that (a different grid padding) must extend them itself — see
+    ``lz_scatter_pallas``.
+    """
+    nt = n_tokens.astype(jnp.int32)
+    ps = payload_sizes.astype(jnp.int32)
+    nc = nt.shape[0]
+    npad = -(-nc // 128) * 128
+    pad = npad - nc
+    if pad:
+        nt = jnp.concatenate([nt, jnp.zeros((pad,), jnp.int32)])
+        ps = jnp.concatenate([ps, jnp.zeros((pad,), jnp.int32)])
+    spec = pl.BlockSpec((1, npad), lambda: (0, 0))
+    fo, po, tot = pl.pallas_call(
+        functools.partial(_offsets_kernel, nc=nc),
+        in_specs=[spec, spec],
+        out_specs=[spec, spec, spec],
+        out_shape=[jax.ShapeDtypeStruct((1, npad), jnp.int32)] * 3,
+        interpret=interpret,
+    )(nt.reshape(1, npad), ps.reshape(1, npad))
+    return fo[0], po[0], tot[0, 0], tot[0, 1]
+
+
+# --------------------------------------- pass 2: encode tail + Kernel III
+
+
+def _scatter_kernel(
+    fo_ref,
+    po_ref,
+    sym_ref,
+    len_ref,
+    off_ref,
+    emit_ref,
+    um_ref,
+    lo_ref,
+    nt_ref,
+    ps_ref,
+    out_ref,
+    *,
+    symbol_size,
+    sec_flags,
+    cap,
+):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        out_ref[...] = jnp.zeros(out_ref.shape, out_ref.dtype)
+
+    g, c = sym_ref.shape
+    s = symbol_size
+    cb = c // 8
+    bufsz = c * s
+    emitted = emit_ref[...]
+    um = um_ref[...]
+    t = lax.broadcasted_iota(jnp.int32, (g, c), 1)
+
+    # token rank -> chunk position: ranks[i] = tokens before position i is
+    # nondecreasing, so the position of rank r is the last i with
+    # ranks[i] <= r (pack_flags computes the same map as a scatter-add).
+    ranks = _prefix_sum_excl(emitted, t, c)
+    tok_pos = _search_last_le(ranks, t, c)
+
+    ntok = nt_ref[...]
+    valid_r = (t < ntok[:, None]).astype(jnp.int32)
+    fbit = jnp.take_along_axis(um, tok_pos, axis=1) * valid_r
+
+    # flag bytes: bit j of byte b is token (8b+j)'s kind (format.py layout)
+    bidx = lax.broadcasted_iota(jnp.int32, (g, cb), 1)
+    fbyte = jnp.zeros((g, cb), jnp.int32)
+    for j in range(8):
+        fbyte = fbyte + (jnp.take_along_axis(fbit, 8 * bidx + j, axis=1) << j)
+
+    # token write offsets in rank space (sentinel bufsz keeps the row
+    # sorted past n_tokens), then payload byte p -> covering token
+    lo_r = jnp.take_along_axis(lo_ref[...], tok_pos, axis=1)
+    tok_off = jnp.where(valid_r == 1, lo_r, bufsz)
+    p = lax.broadcasted_iota(jnp.int32, (g, bufsz), 1)
+    r_of_p = _search_last_le(tok_off, p, c)
+    i_p = jnp.take_along_axis(tok_pos, r_of_p, axis=1)
+    b_p = p - jnp.take_along_axis(tok_off, r_of_p, axis=1)
+    um_p = jnp.take_along_axis(um, i_p, axis=1)
+    ptr = jnp.where(
+        b_p == 0,
+        jnp.take_along_axis(len_ref[...], i_p, axis=1),
+        jnp.take_along_axis(off_ref[...], i_p, axis=1),
+    )
+    sym_p = jnp.take_along_axis(sym_ref[...], i_p, axis=1)
+    lit = (sym_p >> (8 * jnp.clip(b_p, 0, 3))) & 0xFF
+    val = jnp.where(um_p == 1, ptr, lit)
+    prow = jnp.where(p < ps_ref[...][:, None], val, 0)
+
+    # Kernel III: blend each chunk's compact prefix into the blob at its
+    # global offset (RMW merge over a full-width window; grid steps run
+    # sequentially, so later chunks re-blend their own bytes).  Offsets
+    # are SMEM scalar reads; clamping keeps the padded rows' zero-width
+    # windows in bounds even for all-literal worst cases.
+    jf = lax.broadcasted_iota(jnp.int32, (1, cb), 1)
+    jp = lax.broadcasted_iota(jnp.int32, (1, bufsz), 1)
+    for row in range(g):
+        ci = i * g + row
+        fw = (nt_ref[row] + 7) // 8
+        pw = ps_ref[row]
+        fdst = jnp.minimum(sec_flags + fo_ref[ci], cap - cb)
+        cur = pl.load(out_ref, (slice(None), pl.dslice(fdst, cb)))
+        pl.store(
+            out_ref,
+            (slice(None), pl.dslice(fdst, cb)),
+            jnp.where(jf < fw, fbyte[row : row + 1, :], cur),
+        )
+        pdst = jnp.minimum(sec_flags + po_ref[ci], cap - bufsz)
+        cur = pl.load(out_ref, (slice(None), pl.dslice(pdst, bufsz)))
+        pl.store(
+            out_ref,
+            (slice(None), pl.dslice(pdst, bufsz)),
+            jnp.where(jp < pw, prow[row : row + 1, :], cur),
+        )
+
+
+def _cost(nc, c, s):
+    lg = _ceil_log2(c)
+    # two binary searches + flag pack + payload build per position
+    flops = nc * c * (2 * lg + 8 + 4 * s)
+    return pl.CostEstimate(
+        flops=flops,
+        bytes_accessed=nc * c * 4 * 6 + nc * ((c + 7) // 8 + c * s),
+        transcendentals=0,
+    )
+
+
+def _pad_rows(x, pad):
+    if not pad:
+        return x
+    zeros = jnp.zeros((pad,) + x.shape[1:], x.dtype)
+    return jnp.concatenate([x, zeros], axis=0)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "symbol_size",
+        "cap",
+        "sec_flags",
+        "chunks_per_block",
+        "interpret",
+    ),
+)
+def lz_scatter_pallas(
+    symbols,
+    lengths,
+    offsets,
+    emitted,
+    use_match,
+    local_off,
+    n_tokens,
+    payload_sizes,
+    *,
+    symbol_size,
+    cap,
+    sec_flags,
+    chunks_per_block=8,
+    interpret=False,
+):
+    """Fused deflate-scatter: Kernel-I outputs -> (blob, flag_total, pay_total).
+
+    ``blob`` is a (cap,) int32 byte buffer with the compact flag section at
+    ``sec_flags`` and the payload section right after it — the bytes
+    ``deflate.scatter_section`` would have produced, with the header/table
+    region [0, sec_flags) left zero for the caller to fill.
+    """
+    fo, po, f_tot, p_tot = lz_global_offsets_pallas(
+        n_tokens, payload_sizes, interpret=interpret
+    )
+    nc, c = symbols.shape
+    g = chunks_per_block
+    pad = (-nc) % g
+    # the scatter grid covers nc+pad chunks; when that exceeds pass 1's
+    # 128-lane padding (g does not divide 128 and nc is a lane multiple),
+    # extend the scalar-prefetch offsets so fo_ref[ci]/po_ref[ci] stay in
+    # bounds.  Zero is safe: padded rows have zero-width windows, so their
+    # RMW blend at the (clamped, in-bounds) destination stores back what it
+    # loaded.
+    short = nc + pad - fo.shape[0]
+    if short > 0:
+        fo = jnp.concatenate([fo, jnp.zeros((short,), jnp.int32)])
+        po = jnp.concatenate([po, jnp.zeros((short,), jnp.int32)])
+    sym = _pad_rows(symbols.astype(jnp.int32), pad)
+    lens = _pad_rows(lengths.astype(jnp.int32), pad)
+    offs = _pad_rows(offsets.astype(jnp.int32), pad)
+    emit = _pad_rows(emitted.astype(jnp.int32), pad)
+    um = _pad_rows(use_match.astype(jnp.int32), pad)
+    lo = _pad_rows(local_off.astype(jnp.int32), pad)
+    nt = _pad_rows(n_tokens.astype(jnp.int32), pad)
+    ps = _pad_rows(payload_sizes.astype(jnp.int32), pad)
+    npad = nc + pad
+    spec2d = pl.BlockSpec((g, c), lambda i, fo_, po_: (i, 0))
+    spec1d = pl.BlockSpec((g,), lambda i, fo_, po_: (i,))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(npad // g,),
+        in_specs=[spec2d] * 6 + [spec1d] * 2,
+        out_specs=pl.BlockSpec((1, cap), lambda i, fo_, po_: (0, 0)),
+    )
+    out = pl.pallas_call(
+        functools.partial(
+            _scatter_kernel,
+            symbol_size=symbol_size,
+            sec_flags=sec_flags,
+            cap=cap,
+        ),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((1, cap), jnp.int32),
+        cost_estimate=_cost(npad, c, symbol_size),
+        interpret=interpret,
+    )(fo, po, sym, lens, offs, emit, um, lo, nt, ps)
+    return out[0], f_tot, p_tot

@@ -1,9 +1,9 @@
 """Jitted public wrappers for the Pallas kernels.
 
 On non-TPU backends the kernels run in interpret mode (Python execution of the
-kernel body) so the whole framework — including the `pallas-match` and `fused`
-pipeline backends (core/pipeline.py) — is testable on CPU.  On TPU they
-compile via Mosaic.
+kernel body) so the whole framework — including the `pallas-match`, `fused`
+and `fused-deflate` pipeline backends (core/pipeline.py) — is testable on
+CPU.  On TPU they compile via Mosaic.
 """
 
 from __future__ import annotations
@@ -12,14 +12,14 @@ import jax
 
 from repro.kernels import lz_decode as _dec_impl
 from repro.kernels import lz_match as _impl
+from repro.kernels import lz_scatter as _scat_impl
 
 
 def _interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
-def lz_match(symbols, *, window, max_len=_impl.MAX_LEN_CAP,
-             chunks_per_block=8):
+def lz_match(symbols, *, window, max_len=_impl.MAX_LEN_CAP, chunks_per_block=8):
     """(nc, C) int32 symbols -> (lengths, offsets)."""
     return _impl.lz_match_pallas(
         symbols,
@@ -30,8 +30,15 @@ def lz_match(symbols, *, window, max_len=_impl.MAX_LEN_CAP,
     )
 
 
-def lz_kernel1(symbols, *, window, min_match, symbol_size,
-               max_len=_impl.MAX_LEN_CAP, chunks_per_block=8):
+def lz_kernel1(
+    symbols,
+    *,
+    window,
+    min_match,
+    symbol_size,
+    max_len=_impl.MAX_LEN_CAP,
+    chunks_per_block=8,
+):
     """Fused Kernel I (match + select + local prefix sum)."""
     return _impl.lz_kernel1_pallas(
         symbols,
@@ -44,8 +51,45 @@ def lz_kernel1(symbols, *, window, min_match, symbol_size,
     )
 
 
-def lz_decode(flag_bytes, payload, n_tokens, *, symbol_size,
-              chunks_per_block=8):
+def lz_scatter(
+    symbols,
+    lengths,
+    offsets,
+    emitted,
+    use_match,
+    local_off,
+    n_tokens,
+    payload_sizes,
+    *,
+    symbol_size,
+    cap,
+    sec_flags,
+    chunks_per_block=8,
+):
+    """Fused Kernel II+III (global offsets + deflate-scatter).
+
+    Returns ``(blob, flag_total, pay_total)``: a (cap,) int32 byte buffer
+    holding the deflated flag/payload sections (header region left zero)
+    plus the two traced section totals.
+    """
+    return _scat_impl.lz_scatter_pallas(
+        symbols,
+        lengths,
+        offsets,
+        emitted,
+        use_match,
+        local_off,
+        n_tokens,
+        payload_sizes,
+        symbol_size=symbol_size,
+        cap=cap,
+        sec_flags=sec_flags,
+        chunks_per_block=chunks_per_block,
+        interpret=_interpret(),
+    )
+
+
+def lz_decode(flag_bytes, payload, n_tokens, *, symbol_size, chunks_per_block=8):
     """Fused decoder (flag scan + payload gather + copy resolution)."""
     return _dec_impl.lz_decode_pallas(
         flag_bytes,

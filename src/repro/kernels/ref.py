@@ -19,8 +19,9 @@ def lz_match(symbols, *, window, max_len=match_mod.MAX_LEN_CAP):
     )
 
 
-def lz_kernel1(symbols, *, window, min_match, symbol_size,
-               max_len=match_mod.MAX_LEN_CAP):
+def lz_kernel1(
+    symbols, *, window, min_match, symbol_size, max_len=match_mod.MAX_LEN_CAP
+):
     lengths, offsets = lz_match(symbols, window=window, max_len=max_len)
     emitted = encode_mod.select_tokens_scan(lengths, min_match=min_match)
     fields = encode_mod.token_fields(

@@ -15,7 +15,6 @@ vs full-length global layers).
 
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

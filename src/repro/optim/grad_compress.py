@@ -24,7 +24,6 @@ collectives require.
 
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp
@@ -33,9 +32,13 @@ from jax import lax
 from repro.core import format as fmt, pipeline
 from repro.core.pipeline import LZSSConfig
 
-# decoder defaults to "auto": the in-graph decode dispatches the fused
-# Pallas decoder on TPU, xla-parallel elsewhere (core/pipeline.py registry)
-GRAD_LZ = LZSSConfig(symbol_size=2, window=32, chunk_symbols=2048)
+# backend/decoder default to "auto": the in-graph compress emits through
+# the fused-deflate Kernel I+II+III pipeline and the decode dispatches the
+# fused Pallas decoder on TPU; unfused xla / xla-parallel elsewhere
+# (core/pipeline.py registry).  Resolution happens at dispatch time, so
+# importing this module never initializes the JAX platform.
+GRAD_LZ = LZSSConfig(symbol_size=2, window=32, chunk_symbols=2048,
+                     backend="auto")
 MIN_COMPRESS_SIZE = 65_536  # leaves below this exchange raw (graph economy)
 
 

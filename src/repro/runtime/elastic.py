@@ -12,7 +12,6 @@ from __future__ import annotations
 
 import dataclasses
 
-import jax
 
 from repro.launch import steps as steps_lib
 

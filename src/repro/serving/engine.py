@@ -32,15 +32,17 @@ class ServingEngine:
     def __init__(self, cfg, params, max_len: int = 512, kv_compress=False,
                  kv_offload: bool = False, block_tokens: int = 256,
                  budget_blocks: int = 1024, evict_every: int = 8,
-                 kv_decoder: str = "auto"):
+                 kv_decoder: str = "auto", kv_backend: str = "auto"):
         self.cfg = cfg
         self.params = params
         self.max_len = max_len
         self.kv_offload = kv_offload
         self.evict_every = evict_every
-        # kv_decoder: decode-registry key for cold-block restores ("auto" =
-        # fused Pallas decoder on TPU)
-        self.kv_store = KVBlockStore(compress=kv_compress, decoder=kv_decoder)
+        # kv_backend / kv_decoder: compressor/decoder registry keys for the
+        # cold-block eviction and restore dispatches ("auto" = the fused
+        # fused-deflate emit pipeline / fused Pallas decoder on TPU)
+        self.kv_store = KVBlockStore(compress=kv_compress, backend=kv_backend,
+                                     decoder=kv_decoder)
         self.tracker = PagedKVTracker(block_tokens=block_tokens,
                                       budget_blocks=budget_blocks)
         self._step = jax.jit(

@@ -20,7 +20,8 @@ import numpy as np
 from repro.core import lzss
 
 # Geometry for KV blocks (S=2 over bf16).  backend/decoder stay "auto" —
-# resolved per-platform at dispatch time — so importing this module never
+# resolved per-platform at dispatch time ("auto" = the fully fused
+# fused-deflate emit path on TPU) — so importing this module never
 # initializes the JAX platform as a side effect.
 KV_LZ = lzss.LZSSConfig(
     symbol_size=2, window=64, chunk_symbols=2048, backend="auto"
@@ -43,15 +44,20 @@ class BlockStats:
 class KVBlockStore:
     """Host-side store of evicted KV blocks, compressed with GPULZ.
 
-    ``decoder`` overrides the restore-path decode strategy (a decoder
-    registry key; default ``"auto"`` = fused Pallas decoder on TPU) — the
-    batched restores dispatch through ``config.decoder``.
+    ``backend`` overrides the eviction-path compressor strategy and
+    ``decoder`` the restore-path decode strategy (registry keys; default
+    ``"auto"`` = the fused-deflate emit pipeline / fused Pallas decoder on
+    TPU) — batched evictions and restores dispatch through
+    ``config.backend`` / ``config.decoder``.
     """
 
-    def __init__(self, compress: bool = True, config=None, decoder=None):
+    def __init__(self, compress: bool = True, config=None, decoder=None,
+                 backend=None):
         self.compress = compress
         if config is None:
             config = KV_LZ
+        if backend is not None:
+            config = dataclasses.replace(config, backend=backend)
         if decoder is not None:
             config = dataclasses.replace(config, decoder=decoder)
         self.config = config

@@ -1,18 +1,33 @@
-"""Smoke-exercise the benchmark sweep entry points at tiny sizes.
+"""Smoke-exercise the benchmark sweep entry points at tiny sizes, and guard
+the tracked benchmark artifacts.
 
-`make bench-smoke` runs the full CLI drivers; these tests call the sweep
+`make bench-smoke` runs the full CLI drivers; the smoke tests call the sweep
 functions directly so the suite catches API drift (renamed config fields,
 registry keys, JSON schema) without paying interpret-mode compile costs for
 the fused *compressor* (the fused decoder is cheap enough to include).
+
+The `*_artifact_schema` tests (also reachable via `make check-bench`)
+validate the *committed* BENCH_pipeline.json / BENCH_decode.json at the repo
+root: a smoke-size run accidentally written there (instead of /tmp, where
+`make bench-smoke` points) fails CI instead of silently clobbering the perf
+record.
 """
 
 import json
+import pathlib
 
 import numpy as np
 import pytest
 
 fig9 = pytest.importorskip("benchmarks.fig9_throughput")
 fig10 = pytest.importorskip("benchmarks.fig10_decode")
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+# The tracked perf records are measured on >= 64 KiB corpus slices; the
+# bench-smoke targets use 8 KiB sweeps.  Anything below this floor at the
+# repo root is a smoke artifact that escaped /tmp.
+MIN_TRACKED_SWEEP_NBYTES = 1 << 16
 
 
 def _tiny_corpus(nbytes=4096):
@@ -47,3 +62,46 @@ def test_fig10_decoder_sweep_smoke(tmp_path):
     assert "fused_over_xla_parallel" in disk
     for entry in disk["decoders"].values():
         assert entry["gb_per_s"] > 0
+
+
+# --------------------------- tracked-artifact guards (make check-bench)
+
+
+def _tracked(name):
+    path = REPO_ROOT / name
+    assert path.exists(), f"tracked perf record {name} missing from repo root"
+    return json.loads(path.read_text())
+
+
+def _check_timing_entry(name, entry):
+    assert entry["seconds_per_call"] > 0, name
+    assert entry["gb_per_s"] > 0, name
+    assert entry["nbytes"] >= MIN_TRACKED_SWEEP_NBYTES, (
+        f"{name}: nbytes={entry['nbytes']} looks like a bench-smoke run "
+        f"written to the repo root (smoke artifacts belong in /tmp; see "
+        f"the Makefile bench-smoke target)"
+    )
+
+
+def test_bench_pipeline_artifact_schema():
+    rec = _tracked("BENCH_pipeline.json")
+    assert rec["benchmark"] == "fig9_backend_sweep"
+    assert isinstance(rec["platform"], str)
+    assert isinstance(rec["interpret_mode"], bool)
+    assert {"xla", "fused", "fused-deflate"} <= set(rec["backends"])
+    for name, entry in rec["backends"].items():
+        _check_timing_entry(f"backends[{name}]", entry)
+    assert rec["fused_over_xla"] > 0
+    assert rec["fused_deflate_over_xla"] > 0
+
+
+def test_bench_decode_artifact_schema():
+    rec = _tracked("BENCH_decode.json")
+    assert rec["benchmark"] == "fig10_decoder_sweep"
+    assert isinstance(rec["platform"], str)
+    assert isinstance(rec["interpret_mode"], bool)
+    assert rec["ratio"] > 1  # the sweep corpus actually compresses
+    assert {"xla-parallel", "fused"} <= set(rec["decoders"])
+    for name, entry in rec["decoders"].items():
+        _check_timing_entry(f"decoders[{name}]", entry)
+    assert rec["fused_over_xla_parallel"] > 0

@@ -59,7 +59,7 @@ def test_backend_auto_symmetry(monkeypatch):
 
     assert lzss.LZSSConfig(backend="auto").backend == "auto"
     monkeypatch.setattr(jax, "default_backend", lambda: "tpu")
-    assert pipeline.resolve_backend("auto") == "fused"
+    assert pipeline.resolve_backend("auto") == "fused-deflate"
     monkeypatch.setattr(jax, "default_backend", lambda: "cpu")
     assert pipeline.resolve_backend("auto") == "xla"
     # and the auto config compresses to the same container as the resolved key
@@ -88,6 +88,29 @@ def test_register_custom_decoder():
         assert np.array_equal(out, data)
     finally:
         pipeline._DECODERS.pop("test-echo-decoder", None)
+
+
+def test_register_decoder_duplicate_raises():
+    """Silent overwrite of a registered decoder is a bug (satellite fix)."""
+
+    class Dup:
+        name = "test-dup-decoder"
+
+        def decode(self, flag_bytes, payload, n_tokens, *, symbol_size):
+            return pipeline.get_decoder("xla-parallel").decode(
+                flag_bytes, payload, n_tokens, symbol_size=symbol_size
+            )
+
+    pipeline.register_decoder(Dup())
+    try:
+        with pytest.raises(ValueError, match="already registered"):
+            pipeline.register_decoder(Dup())
+        # explicit overwrite is the sanctioned replacement path
+        replacement = Dup()
+        assert pipeline.register_decoder(replacement, overwrite=True) is replacement
+        assert pipeline._DECODERS["test-dup-decoder"] is replacement
+    finally:
+        pipeline._DECODERS.pop("test-dup-decoder", None)
 
 
 def test_registries_hold_instances_not_classes():

@@ -7,8 +7,10 @@ import jax.numpy as jnp
 import pytest
 
 from repro.core import decode, deflate
+from repro.core import format as fmt
 from repro.core.pipeline import LZSSConfig, get_backend
 from repro.kernels import lz_decode as kdec, lz_match as kmod, ref
+from repro.kernels import lz_scatter as kscat
 
 
 def _data(nc, c, vocab, seed):
@@ -116,6 +118,107 @@ def test_decode_kernel_non_pow2_chunk_and_padding():
         fb, pay, ntok, symbol_size=2, chunks_per_block=8, interpret=True
     )
     np.testing.assert_array_equal(np.asarray(got), np.asarray(syms))
+
+
+def test_offsets_kernel_matches_global_offsets():
+    """Fused Kernel II == deflate.global_offsets (both prefix sums + totals)."""
+    rng = np.random.default_rng(3)
+    ntok = jnp.asarray(rng.integers(1, 100, 11).astype(np.int32))
+    paysz = jnp.asarray(rng.integers(0, 256, 11).astype(np.int32))
+    flag_sizes = (ntok + 7) // 8
+    exp_po, exp_pt, exp_fo, exp_ft = deflate.global_offsets(paysz, flag_sizes)
+    fo, po, ft, pt = kscat.lz_global_offsets_pallas(ntok, paysz, interpret=True)
+    assert int(ft) == int(exp_ft)
+    assert int(pt) == int(exp_pt)
+    np.testing.assert_array_equal(np.asarray(fo)[:11], np.asarray(exp_fo))
+    # pay offsets come out pre-based past the flag section
+    np.testing.assert_array_equal(
+        np.asarray(po)[:11], np.asarray(exp_po) + int(exp_ft)
+    )
+
+
+def _scatter_reference(syms, k1, s):
+    """The unfused XLA tail's section bytes (Kernels II+III), header left 0."""
+    nc, c = syms.shape
+    flag_bytes, flag_sizes = deflate.pack_flags(
+        k1["emitted"], k1["use_match"], n_tokens=k1["n_tokens"]
+    )
+    payload = deflate.build_chunk_payloads(
+        syms, k1["lengths"], k1["offsets"], k1, symbol_size=s
+    )
+    pay_off, pay_total, flag_off, flag_total = deflate.global_offsets(
+        k1["payload_sizes"], flag_sizes
+    )
+    cap = fmt.max_compressed_bytes(nc * c * s, s, c)
+    sec_flags = fmt.HEADER_BYTES + 8 * nc
+    out = jnp.zeros((cap,), jnp.int32)
+    out = deflate.scatter_section(out, sec_flags, flag_bytes, flag_sizes, flag_off)
+    out = deflate.scatter_section(
+        out, sec_flags + flag_total, payload, k1["payload_sizes"], pay_off
+    )
+    return out, flag_total, pay_total, cap, sec_flags
+
+
+@pytest.mark.parametrize("s", [1, 2, 4])
+@pytest.mark.parametrize("c", [64, 128])
+@pytest.mark.parametrize("g", [2, 8])
+def test_scatter_kernel_sweep(s, c, g):
+    """Fused Kernel II+III == the XLA deflate tail, byte for byte."""
+    rng = np.random.default_rng(s * c + g)
+    raw = np.repeat(rng.integers(0, 6, 5 * c // 2), 2)[: 5 * c]
+    syms = jnp.asarray(raw.reshape(5, c).astype(np.int32))
+    cfg = LZSSConfig(symbol_size=s, window=16, chunk_symbols=c)
+    k1 = get_backend("xla").kernel1(syms, cfg)
+    exp, exp_ft, exp_pt, cap, sec_flags = _scatter_reference(syms, k1, s)
+    got, ft, pt = kscat.lz_scatter_pallas(
+        syms, k1["lengths"], k1["offsets"], k1["emitted"], k1["use_match"],
+        k1["local_off"], k1["n_tokens"], k1["payload_sizes"],
+        symbol_size=s, cap=cap, sec_flags=sec_flags, chunks_per_block=g,
+        interpret=True,
+    )
+    assert int(ft) == int(exp_ft)
+    assert int(pt) == int(exp_pt)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(exp))
+
+
+def test_scatter_kernel_grid_padding_exceeds_offset_lanes():
+    """nc a multiple of 128 with a chunks_per_block that does not divide 128:
+    the scatter grid (129 chunk rows) outruns pass 1's 128-lane offset
+    padding, which must be extended — a regression for an OOB scalar-prefetch
+    read."""
+    rng = np.random.default_rng(11)
+    raw = np.repeat(rng.integers(0, 5, 128 * 16), 2)[: 128 * 32]
+    syms = jnp.asarray(raw.reshape(128, 32).astype(np.int32))
+    cfg = LZSSConfig(symbol_size=1, window=8, chunk_symbols=32)
+    k1 = get_backend("xla").kernel1(syms, cfg)
+    exp, exp_ft, exp_pt, cap, sec_flags = _scatter_reference(syms, k1, 1)
+    got, ft, pt = kscat.lz_scatter_pallas(
+        syms, k1["lengths"], k1["offsets"], k1["emitted"], k1["use_match"],
+        k1["local_off"], k1["n_tokens"], k1["payload_sizes"],
+        symbol_size=1, cap=cap, sec_flags=sec_flags, chunks_per_block=3,
+        interpret=True,
+    )
+    assert int(ft) == int(exp_ft)
+    assert int(pt) == int(exp_pt)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(exp))
+
+
+def test_scatter_kernel_all_literal_worst_case():
+    """Noise input (all-literal chunks fill the worst-case capacity): the
+    grid-padded rows' clamped windows must stay in bounds and write nothing."""
+    rng = np.random.default_rng(7)
+    syms = jnp.asarray(rng.integers(0, 2**16, (3, 64)).astype(np.int32))
+    cfg = LZSSConfig(symbol_size=2, window=16, chunk_symbols=64)
+    k1 = get_backend("xla").kernel1(syms, cfg)
+    exp, exp_ft, exp_pt, cap, sec_flags = _scatter_reference(syms, k1, 2)
+    got, ft, pt = kscat.lz_scatter_pallas(
+        syms, k1["lengths"], k1["offsets"], k1["emitted"], k1["use_match"],
+        k1["local_off"], k1["n_tokens"], k1["payload_sizes"],
+        symbol_size=2, cap=cap, sec_flags=sec_flags, chunks_per_block=8,
+        interpret=True,
+    )
+    assert int(pt) == int(exp_pt)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(exp))
 
 
 def test_decode_kernel_empty_and_full_chunks():

@@ -24,7 +24,7 @@ def _corpus(seed, n=1500):
 
 
 def test_registry_lists_all_backends():
-    assert {"xla", "xla-scan", "pallas-match", "fused"} <= set(
+    assert {"xla", "xla-scan", "pallas-match", "fused", "fused-deflate"} <= set(
         lzss.available_backends()
     )
 
@@ -56,17 +56,42 @@ def test_register_custom_backend():
         pipeline._BACKENDS.pop("test-echo", None)
 
 
-# ------------------------------------- fused == xla, bit for bit
+def test_register_backend_duplicate_raises():
+    """Silent overwrite of a registered backend is a bug (satellite fix)."""
+
+    class Dup:
+        name = "test-dup"
+
+        def kernel1(self, symbols, cfg):
+            return pipeline.get_backend("xla").kernel1(symbols, cfg)
+
+    pipeline.register_backend(Dup())
+    try:
+        with pytest.raises(ValueError, match="already registered"):
+            pipeline.register_backend(Dup())
+        # the built-in entries are protected too
+        with pytest.raises(ValueError, match="already registered"):
+            pipeline.register_backend(pipeline.XlaBackend())
+        # explicit overwrite is the sanctioned replacement path
+        replacement = Dup()
+        assert pipeline.register_backend(replacement, overwrite=True) is replacement
+        assert pipeline._BACKENDS["test-dup"] is replacement
+    finally:
+        pipeline._BACKENDS.pop("test-dup", None)
 
 
+# ----------------------- fused / fused-deflate == xla, bit for bit
+
+
+@pytest.mark.parametrize("backend", ["fused", "fused-deflate"])
 @pytest.mark.parametrize("symbol_size", [1, 2, 4])
 @pytest.mark.parametrize("level", [1, 2, 3, 4])
-def test_fused_container_identical_to_xla(symbol_size, level):
+def test_fused_container_identical_to_xla(backend, symbol_size, level):
     window = lzss.WINDOW_LEVELS[level]
     data = _corpus(symbol_size * 10 + level)
     kw = dict(symbol_size=symbol_size, window=window, chunk_symbols=128)
     a = lzss.compress(data, lzss.LZSSConfig(backend="xla", **kw))
-    b = lzss.compress(data, lzss.LZSSConfig(backend="fused", **kw))
+    b = lzss.compress(data, lzss.LZSSConfig(backend=backend, **kw))
     assert a.total_bytes == b.total_bytes
     assert np.array_equal(a.data, b.data)
     # and the container actually decodes back to the input
@@ -94,6 +119,35 @@ def test_fused_routes_through_kernel1(monkeypatch):
     assert calls["n"] == 0
     lzss.compress(data, lzss.LZSSConfig(backend="fused", **kw))
     assert calls["n"] == 1
+
+
+def test_fused_deflate_routes_through_scatter_kernel(monkeypatch):
+    """backend='fused-deflate' must emit through ops.lz_scatter (fused
+    Kernel II+III); 'fused' and 'xla' must keep using the XLA tail."""
+    from repro.kernels import ops
+
+    calls = {"scatter": 0, "kernel1": 0}
+    real_scatter, real_k1 = ops.lz_scatter, ops.lz_kernel1
+
+    def counting_scatter(*args, **kwargs):
+        calls["scatter"] += 1
+        return real_scatter(*args, **kwargs)
+
+    def counting_k1(*args, **kwargs):
+        calls["kernel1"] += 1
+        return real_k1(*args, **kwargs)
+
+    monkeypatch.setattr(ops, "lz_scatter", counting_scatter)
+    monkeypatch.setattr(ops, "lz_kernel1", counting_k1)
+    data = _corpus(43)
+    # unusual geometry => fresh jit trace (see above)
+    kw = dict(symbol_size=2, window=27, chunk_symbols=96)
+    lzss.compress(data, lzss.LZSSConfig(backend="xla", **kw))
+    lzss.compress(data, lzss.LZSSConfig(backend="fused", **kw))
+    assert calls["scatter"] == 0
+    lzss.compress(data, lzss.LZSSConfig(backend="fused-deflate", **kw))
+    assert calls["scatter"] == 1
+    assert calls["kernel1"] == 2  # fused-deflate reuses the fused Kernel I
 
 
 # -------------------------------------------------- batched in-graph API

@@ -27,11 +27,15 @@ def roundtrip(data: np.ndarray, cfg: lzss.LZSSConfig):
     data=st.binary(min_size=0, max_size=2000),
     symbol_size=st.sampled_from([1, 2, 4]),
     window=st.sampled_from([4, 17, 64, 255]),
+    backend=st.sampled_from(["xla", "fused-deflate"]),
 )
-def test_roundtrip_property(data, symbol_size, window):
+def test_roundtrip_property(data, symbol_size, window, backend):
+    """Round-trips through the unfused tail AND the fused deflate-scatter
+    emit path (fused Kernel II+III) — backends_identical_property below
+    additionally pins their containers byte-identical."""
     arr = np.frombuffer(data, np.uint8)
     cfg = lzss.LZSSConfig(symbol_size=symbol_size, window=window,
-                          chunk_symbols=128)
+                          chunk_symbols=128, backend=backend)
     roundtrip(arr, cfg)
 
 
