@@ -4,13 +4,15 @@
 # offline CI container without an install step.
 #
 # CI (.github/workflows/ci.yml) runs: test-fast + bench-smoke + check-bench
-# on a Python 3.10/3.11 matrix, and `ruff check` / `ruff format --check` as
-# a separate lint job.
+# on a Python 3.10/3.11 matrix, test-multidevice + bench-sharded-smoke in a
+# separate multidevice lane (8 forced host devices), and `ruff check` /
+# `ruff format --check` as a separate lint job.
 
 PY ?= python
 
-.PHONY: test test-fast check-bench lint \
-	bench-pipeline bench-decode bench-smoke bench
+.PHONY: test test-fast test-multidevice check-bench lint \
+	bench-pipeline bench-decode bench-sharded bench-sharded-smoke \
+	bench-smoke bench
 
 test:
 	PYTHONPATH=src $(PY) -m pytest -x -q
@@ -18,21 +20,41 @@ test:
 test-fast:
 	PYTHONPATH=src $(PY) -m pytest -x -q -m "not slow"
 
+# Sharding/batch tests with the test process itself seeing 8 (forced host)
+# devices: exercises the shard-mapped "sharded" compressor/decoder pair on
+# a real mesh — the @multidevice tests that skip under plain tier-1.
+test-multidevice:
+	PYTHONPATH=src XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+		$(PY) -m pytest -q tests/test_sharding.py -m "not slow"
+
 # Schema-validate the tracked BENCH_*.json perf records (catches a smoke run
 # accidentally written to the repo root before it clobbers the trajectory).
 check-bench:
 	PYTHONPATH=src $(PY) -m pytest -q tests/test_benchmarks.py -k artifact_schema
 
-# Mirrors the CI lint job (requires ruff: pip install -e .[lint]).
+# Mirrors the CI lint job (requires ruff: pip install -e .[lint]).  Format
+# enforcement covers the kernel + sharding subsystems and the pipeline
+# module; the rest of src/ converges module by module as PRs touch it.
 lint:
 	ruff check src tests benchmarks
-	ruff format --check src/repro/kernels
+	ruff format --check src/repro/kernels src/repro/sharding \
+		src/repro/core/pipeline.py
 
 bench-pipeline:
 	PYTHONPATH=src:. $(PY) benchmarks/fig9_throughput.py --backend fused-deflate
 
 bench-decode:
 	PYTHONPATH=src:. $(PY) benchmarks/fig10_decode.py --decoder fused
+
+# Shard-mapped batch compression vs the single-device dispatch on a forced
+# host mesh (the script sets XLA_FLAGS itself, before importing jax).
+bench-sharded:
+	PYTHONPATH=src:. $(PY) benchmarks/sharded_batch.py --devices 8
+
+bench-sharded-smoke:
+	PYTHONPATH=src:. $(PY) benchmarks/sharded_batch.py --devices 8 \
+		--buffers 8 --nbytes 8192 \
+		--out-json /tmp/BENCH_sharded.smoke.json
 
 # Tiny-size smoke of both fig sweeps: exercises the bench scripts end to end
 # (compress + decode + JSON artifacts) in seconds, even in interpret mode.

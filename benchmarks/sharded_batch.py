@@ -1,0 +1,130 @@
+"""Shard-mapped batch compression vs the single-device batched dispatch.
+
+Times ``lzss.compress_many`` / ``decompress_many`` for a batch of B buffers
+with the ``"sharded"`` compressor/decoder pair (the B dimension shard-mapped
+over a mesh axis; ``sharding/batch.py``) against the plain single-device
+dispatch, and verifies byte identity while at it.
+
+On a CPU container the mesh is *forced host devices*
+(``--xla_force_host_platform_device_count``), so absolute numbers measure
+dispatch structure only — host "devices" share the same cores and the
+sharded path cannot show a real speedup (see EXPERIMENTS.md §Sharded-batch).
+On a real multi-chip TPU slice the same sweep measures the actual scaling of
+the batch axis.
+
+``--devices`` must take effect before jax initializes, so ``main`` edits
+``XLA_FLAGS`` before its (function-local) jax import — run the script
+directly (``make bench-sharded`` / ``bench-sharded-smoke``), not from an
+already-initialized process.  Importing this module has no side effects.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+
+def parse_args(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--devices", type=int, default=8,
+                    help="forced host device count (0 = use existing devices)")
+    ap.add_argument("--buffers", type=int, default=16, help="batch size B")
+    ap.add_argument("--nbytes", type=int, default=1 << 16,
+                    help="bytes per buffer")
+    ap.add_argument("--window", type=int, default=64)
+    ap.add_argument("--chunk-symbols", type=int, default=2048)
+    ap.add_argument("--out-json", default="/tmp/BENCH_sharded.json",
+                    help="artifact path (NOT tracked at the repo root: "
+                         "forced host-device numbers are dispatch-structure "
+                         "only)")
+    return ap.parse_args(argv)
+
+
+def corpus(b: int, nbytes: int) -> list:
+    """Run-heavy + noisy buffers (matches AND literals in every container)."""
+    import numpy as np
+
+    rng = np.random.default_rng(0)
+    out = []
+    for _ in range(b):
+        runs = np.repeat(
+            rng.integers(0, 9, nbytes // 8).astype(np.uint16), 2
+        ).view(np.uint8)
+        noise = rng.integers(0, 256, nbytes // 4, dtype=np.uint16).view(np.uint8)
+        buf = np.concatenate([runs, noise])[:nbytes]
+        assert buf.size == nbytes
+        out.append(buf.copy())
+    return out
+
+
+def run(args) -> dict:
+    import jax
+    import numpy as np
+
+    from benchmarks.common import emit, throughput_gbs, time_fn
+    from repro.core import lzss
+
+    print("# sharded_batch: name,us_per_call,GB/s")
+    mesh = jax.make_mesh((jax.device_count(),), ("data",))
+    items = corpus(args.buffers, args.nbytes)
+    total = sum(x.size for x in items)
+    kw = dict(
+        symbol_size=2, window=args.window, chunk_symbols=args.chunk_symbols
+    )
+    single = lzss.LZSSConfig(**kw)
+    sharded = lzss.LZSSConfig(
+        **kw, backend="sharded", decoder="sharded", mesh=mesh
+    )
+
+    results = {}
+    ref = lzss.compress_many(items, single)
+    for name, cfg in (("single-device", single), ("sharded", sharded)):
+        t_c = time_fn(lambda: lzss.compress_many(items, cfg))
+        batch = lzss.compress_many(items, cfg)
+        assert np.array_equal(batch.data, ref.data), f"{name}: blobs diverged"
+        mesh_arg = mesh if name == "sharded" else None
+        t_d = time_fn(lambda: lzss.decompress_many(batch, mesh=mesh_arg))
+        emit(f"sharded_batch/compress-{name}", t_c,
+             f"{throughput_gbs(total, t_c):.4f}")
+        emit(f"sharded_batch/decompress-{name}", t_d,
+             f"{throughput_gbs(total, t_d):.4f}")
+        results[name] = {
+            "compress_seconds_per_call": t_c,
+            "decompress_seconds_per_call": t_d,
+            "gb_per_s_compress": throughput_gbs(total, t_c),
+            "nbytes_total": int(total),
+        }
+
+    record = {
+        "benchmark": "sharded_batch",
+        "platform": jax.default_backend(),
+        "interpret_mode": jax.default_backend() != "tpu",
+        "forced_host_devices": bool(args.devices),
+        "n_devices": jax.device_count(),
+        "buffers": args.buffers,
+        "byte_identical": True,  # asserted above
+        "results": results,
+        "sharded_over_single_compress": (
+            results["single-device"]["compress_seconds_per_call"]
+            / max(results["sharded"]["compress_seconds_per_call"], 1e-12)
+        ),
+    }
+    with open(args.out_json, "w") as f:
+        json.dump(record, f, indent=2)
+    print(f"# wrote {args.out_json}")
+    return record
+
+
+def main(argv=None):
+    args = parse_args(argv)
+    if args.devices:
+        flags = os.environ.get("XLA_FLAGS", "")
+        os.environ["XLA_FLAGS"] = (
+            f"{flags} --xla_force_host_platform_device_count={args.devices}"
+        ).strip()
+    return run(args)
+
+
+if __name__ == "__main__":
+    main()

@@ -17,7 +17,13 @@ Fault-tolerance properties:
     paper's multi-byte rule;
   * leaves of a dtype class are compressed together: one batched pipeline
     dispatch (``lzss.compress_many``) per (symbol size, chunk-count bucket)
-    group instead of one ``compress()`` call per leaf.
+    group instead of one ``compress()`` call per leaf;
+  * with ``lz_mesh=...`` that dispatch is shard-mapped over the mesh's batch
+    axis (``sharding/batch.py``, the ``"sharded"`` registry pair).  Blobs are
+    byte-identical to the single-device dispatch, so checkpoints stay
+    mesh-agnostic: a step written on an 8-device mesh restores on 2 devices
+    (or 1) — ``runtime/elastic.py`` re-points ``lz_mesh`` at the
+    restore-side mesh.
 """
 
 from __future__ import annotations
@@ -54,15 +60,28 @@ class CheckpointManager:
     lz_backend: str = "auto"   # compressor registry key; "auto" = the fully
                                # fused fused-deflate pipeline on TPU
     lz_decoder: str = "auto"   # decode registry key; "auto" = fused on TPU
+    lz_mesh: object = None     # shard each per-dtype-class batched dispatch
+                               # over this mesh ("sharded" registry pair);
+                               # blobs on disk stay byte-identical, so a
+                               # checkpoint written on one mesh restores on
+                               # any other (runtime/elastic.py re-points
+                               # lz_mesh at the restore-side mesh)
+    lz_batch_axis: object = None
 
     # ------------------------------------------------------------- save
 
     def _lz_config(self, symbol_size: int) -> "lzss.LZSSConfig":
-        # "auto" backend/decoder resolve per-platform at dispatch time
+        # "auto" backend/decoder resolve per-platform at dispatch time;
+        # with a mesh they map to the shard-mapped "sharded" pair instead
+        backend, decoder = self.lz_backend, self.lz_decoder
+        if self.lz_mesh is not None:
+            backend = "sharded" if backend == "auto" else backend
+            decoder = "sharded" if decoder == "auto" else decoder
         return lzss.LZSSConfig(
             symbol_size=symbol_size, window=self.lz_window,
-            chunk_symbols=self.lz_chunk, backend=self.lz_backend,
-            decoder=self.lz_decoder,
+            chunk_symbols=self.lz_chunk, backend=backend,
+            decoder=decoder, mesh=self.lz_mesh,
+            batch_axis=self.lz_batch_axis,
         )
 
     def save(self, state, step: int) -> str:
@@ -161,9 +180,14 @@ class CheckpointManager:
                 (h.symbol_size, h.chunk_symbols, h.n_chunks), []
             ).append(name)
         decompressed = {}
+        # an explicitly non-sharded lz_decoder + lz_mesh means compress-side
+        # sharding only: restore single-device rather than conflicting
+        sharded = self.lz_decoder in ("auto", "sharded")
         for group in geom_groups.values():
             raws = lzss.decompress_many(
-                [blobs[n] for n in group], decoder=self.lz_decoder
+                [blobs[n] for n in group], decoder=self.lz_decoder,
+                mesh=self.lz_mesh if sharded else None,
+                batch_axis=self.lz_batch_axis if sharded else None,
             )
             decompressed.update(
                 {n: r.tobytes() for n, r in zip(group, raws)}

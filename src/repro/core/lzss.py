@@ -195,14 +195,26 @@ def compress_many(
     )
 
 
-def decompress_many(batch, decoder: str = "auto") -> list:
+def decompress_many(
+    batch, decoder: str = "auto", mesh=None, batch_axis=None
+) -> list:
     """Decompress a batch of containers in ONE jitted dispatch.
 
     ``batch`` is a ``BatchedCompressResult`` or a list of container blobs.
     All containers must share the same geometry (S, C, n_chunks) — true for
     anything produced by ``compress_many``.  ``decoder`` selects the decode
-    strategy by registry key.  Returns a list of uint8 arrays.
+    strategy by registry key.  ``mesh``/``batch_axis`` shard the B dimension
+    of the dispatch over a device mesh via the ``"sharded"`` decoder
+    (``sharding/batch.py``); symbols are identical to the single-device
+    dispatch.  Returns a list of uint8 arrays.
     """
+    if mesh is not None:
+        if decoder not in ("auto", "sharded"):
+            raise ValueError(
+                f"mesh= shards the dispatch through the 'sharded' decoder; "
+                f"it cannot be combined with decoder={decoder!r}"
+            )
+        decoder = "sharded"
     if isinstance(batch, BatchedCompressResult):
         # slice rows to their live bytes: the stacked buffer is worst-case
         # wide, and the dispatch width below must track actual sizes
@@ -214,13 +226,17 @@ def decompress_many(batch, decoder: str = "auto") -> list:
         blobs = [np.asarray(b, np.uint8) for b in batch]
     headers = [fmt.parse_header(b) for b in blobs]
     h0 = headers[0]
-    for h in headers[1:]:
+    for i, h in enumerate(headers[1:], start=1):
         if (h.symbol_size, h.chunk_symbols, h.n_chunks) != (
             h0.symbol_size, h0.chunk_symbols, h0.n_chunks
         ):
             raise ValueError(
-                "decompress_many requires a homogeneous batch geometry; "
-                "decompress mismatched containers individually"
+                f"decompress_many requires a homogeneous batch geometry; "
+                f"buffer 0 has (symbol_size={h0.symbol_size}, "
+                f"chunk_symbols={h0.chunk_symbols}, n_chunks={h0.n_chunks}) "
+                f"but buffer {i} has (symbol_size={h.symbol_size}, "
+                f"chunk_symbols={h.chunk_symbols}, n_chunks={h.n_chunks}); "
+                f"decompress mismatched containers individually"
             )
     tables = [fmt.parse_tables(b, h) for b, h in zip(blobs, headers)]
     width = _dispatch_capacity(max(b.size for b in blobs))
@@ -235,6 +251,12 @@ def decompress_many(batch, decoder: str = "auto") -> list:
         chunk_symbols=h0.chunk_symbols,
         n_chunks=h0.n_chunks,
         decoder=resolve_decoder(decoder),  # one trace cache entry per key
+        mesh=mesh,
+        batch_axis=(
+            tuple(batch_axis)
+            if isinstance(batch_axis, list)
+            else batch_axis  # static jit arg: must be hashable
+        ),
     )
     s = h0.symbol_size
     flat = np.asarray(symbols).reshape(len(blobs), -1)

@@ -50,6 +50,14 @@ Registered backends:
                     blob via scalar-prefetched per-chunk offsets.  The
                     aligned (nc, C//8)/(nc, C*S) section arrays never
                     materialize in HBM.
+  ``sharded``       multi-device batch layer (sharding/batch.py): the B
+                    dimension of the batched entry points is shard-mapped
+                    over ``LZSSConfig(mesh=..., batch_axis=...)`` and every
+                    shard runs the auto-resolved platform backend.  Plugs in
+                    through two more optional backend hooks, ``compress_many``
+                    / ``decompress_many`` (mirroring ``emit``): a backend may
+                    own the whole batched dispatch, with the vmapped
+                    single-buffer core as the default.
 
 Decompression mirrors the same design: ``DecoderBackend`` is the decode-side
 contract (per-chunk aligned flag/payload sections -> symbols), with its own
@@ -62,6 +70,9 @@ registry (``register_decoder`` / ``get_decoder``) and entries
                     extraction, both read/write prefix sums, payload gather
                     and pointer-doubling copy resolution stay in VMEM per
                     chunk block; symbols are written to HBM exactly once.
+  ``sharded``       decode-side mirror of the sharded compressor: batched
+                    decompression shard-mapped over the mesh passed at
+                    dispatch, platform decoder per shard.
 
 ``LZSSConfig.decoder`` accepts a registry key, ``"auto"`` (fused on TPU,
 xla-parallel elsewhere — resolved at dispatch, like ``default_backend()``)
@@ -109,13 +120,23 @@ class LZSSConfig:
     and both accept ``"auto"`` (resolved per-platform at dispatch time).
     The legacy decoder aliases ``"parallel"``/``"scan"`` normalize to their
     registry keys here.
+
+    ``mesh``/``batch_axis`` configure the shard-mapped multi-device batch
+    layer (``sharding/batch.py``): the ``"sharded"`` compressor/decoder pair
+    partitions the B dimension of the batched entry points over the named
+    mesh axis (or axes; default: the logical batch axes from
+    ``sharding/rules.py``) and runs the platform-default backend per shard.
+    Only those registry entries consult ``mesh`` — setting it with any other
+    backend/decoder would be silently ignored, so it is rejected here.
     """
 
-    symbol_size: int = 2          # S in {1, 2, 4}
-    window: int = 128             # W in [1, 255]; levels 1-4 = 32/64/128/255
-    chunk_symbols: int = 2048     # C; VMEM-resident chunk
-    backend: str = "xla"          # registry key, see available_backends()
-    decoder: str = "auto"         # registry key, see available_decoders()
+    symbol_size: int = 2  # S in {1, 2, 4}
+    window: int = 128  # W in [1, 255]; levels 1-4 = 32/64/128/255
+    chunk_symbols: int = 2048  # C; VMEM-resident chunk
+    backend: str = "xla"  # registry key, see available_backends()
+    decoder: str = "auto"  # registry key, see available_decoders()
+    mesh: object = None  # jax.sharding.Mesh for "sharded" entries
+    batch_axis: object = None  # axis name (or tuple) carrying B; None=auto
 
     def __post_init__(self):
         if self.symbol_size not in (1, 2, 4):
@@ -138,6 +159,30 @@ class LZSSConfig:
                 f"registered: {available_decoders()} "
                 f"(also accepted: 'auto', {sorted(_DECODER_ALIASES)})"
             )
+        if isinstance(self.batch_axis, list):
+            # jit static-arg hashability: axis collections must be tuples
+            object.__setattr__(self, "batch_axis", tuple(self.batch_axis))
+        if self.mesh is None:
+            if self.batch_axis is not None:
+                raise ValueError("batch_axis requires mesh=...")
+            return
+        if self.backend != "sharded" and self.decoder != "sharded":
+            raise ValueError(
+                "mesh=... is only consulted by the 'sharded' compressor/"
+                "decoder; set backend='sharded' and/or decoder='sharded'"
+            )
+        axes = (
+            (self.batch_axis,)
+            if isinstance(self.batch_axis, str)
+            else self.batch_axis
+        )
+        if axes is not None:
+            missing = [a for a in axes if a not in self.mesh.axis_names]
+            if missing:
+                raise ValueError(
+                    f"batch_axis {missing} not in mesh axes "
+                    f"{tuple(self.mesh.axis_names)}"
+                )
 
     @property
     def min_match(self) -> int:
@@ -225,9 +270,9 @@ def available_backends() -> list:
 
 def _derive_fields(lengths, emitted, use_match, *, symbol_size):
     """The per-position byte sizes implied by a selection."""
-    return jnp.where(
-        emitted, jnp.where(use_match, 2, symbol_size), 0
-    ).astype(jnp.int32)
+    return jnp.where(emitted, jnp.where(use_match, 2, symbol_size), 0).astype(
+        jnp.int32
+    )
 
 
 class _XlaBackendBase:
@@ -243,8 +288,7 @@ class _XlaBackendBase:
         lengths, offsets = self._matches(symbols, cfg)
         emitted = self.selector(lengths, min_match=cfg.min_match)
         fields = encode.token_fields(
-            lengths, emitted, min_match=cfg.min_match,
-            symbol_size=cfg.symbol_size,
+            lengths, emitted, min_match=cfg.min_match, symbol_size=cfg.symbol_size
         )
         return dict(lengths=lengths, offsets=offsets, emitted=emitted, **fields)
 
@@ -290,8 +334,7 @@ class FusedBackend:
         )
         use_match = out["emitted"] & (out["lengths"] >= cfg.min_match)
         sizes = _derive_fields(
-            out["lengths"], out["emitted"], use_match,
-            symbol_size=cfg.symbol_size,
+            out["lengths"], out["emitted"], use_match, symbol_size=cfg.symbol_size
         )
         return dict(out, use_match=use_match, sizes=sizes)
 
@@ -329,11 +372,39 @@ class FusedDeflateBackend(FusedBackend):
         )
 
 
+class ShardedCompressor:
+    """Shard-mapped multi-device batch execution (``sharding/batch.py``).
+
+    The batched entry point dispatches here via the optional
+    ``compress_many`` hook: the B dimension is partitioned over
+    ``cfg.mesh``'s batch axis and every shard runs the auto-resolved
+    platform backend — byte-identical to the single-device dispatch by
+    construction.  Single-buffer calls (``compress_chunks``) and
+    ``mesh=None`` degenerate to the platform backend directly.
+    """
+
+    name = "sharded"
+
+    def kernel1(self, symbols, cfg):
+        return get_backend("auto").kernel1(symbols, cfg)
+
+    def emit(self, symbols, k1, cfg, orig_bytes=None):
+        inner = get_backend("auto")
+        return getattr(inner, "emit", emit_xla)(symbols, k1, cfg, orig_bytes)
+
+    def compress_many(self, symbols, cfg, orig_bytes):
+        from repro.sharding import batch as shbatch  # lazy: avoid cycle
+
+        runner = shbatch.ShardedBatchRunner(cfg.mesh, cfg.batch_axis)
+        return runner.compress_many(symbols, cfg, orig_bytes)
+
+
 register_backend(XlaBackend())
 register_backend(XlaScanBackend())
 register_backend(PallasMatchBackend())
 register_backend(FusedBackend())
 register_backend(FusedDeflateBackend())
+register_backend(ShardedCompressor())
 
 
 # ------------------------------------------------------------- decoders
@@ -350,8 +421,12 @@ class DecoderBackend(Protocol):
     name: str
 
     def decode(
-        self, flag_bytes: jnp.ndarray, payload: jnp.ndarray,
-        n_tokens: jnp.ndarray, *, symbol_size: int,
+        self,
+        flag_bytes: jnp.ndarray,
+        payload: jnp.ndarray,
+        n_tokens: jnp.ndarray,
+        *,
+        symbol_size: int,
     ) -> jnp.ndarray: ...
 
 
@@ -445,9 +520,49 @@ class FusedDecoder:
         )
 
 
+class ShardedDecoder:
+    """Decode-side mirror of ``ShardedCompressor``: the batched entry point
+    dispatches through the optional ``decompress_many`` hook, which shards
+    the B dimension over the mesh passed at dispatch and runs the platform
+    decoder per shard.  Per-chunk ``decode`` calls (and ``mesh=None``)
+    degenerate to the platform decoder directly."""
+
+    name = "sharded"
+
+    def decode(self, flag_bytes, payload, n_tokens, *, symbol_size):
+        return get_decoder("auto").decode(
+            flag_bytes, payload, n_tokens, symbol_size=symbol_size
+        )
+
+    def decompress_many(
+        self,
+        blobs,
+        n_tokens,
+        payload_sizes,
+        *,
+        symbol_size,
+        chunk_symbols,
+        n_chunks,
+        mesh,
+        batch_axis,
+    ):
+        from repro.sharding import batch as shbatch  # lazy: avoid cycle
+
+        runner = shbatch.ShardedBatchRunner(mesh, batch_axis)
+        return runner.decompress_many(
+            blobs,
+            n_tokens,
+            payload_sizes,
+            symbol_size=symbol_size,
+            chunk_symbols=chunk_symbols,
+            n_chunks=n_chunks,
+        )
+
+
 register_decoder(XlaParallelDecoder())
 register_decoder(XlaScanDecoder())
 register_decoder(FusedDecoder())
+register_decoder(ShardedDecoder())
 
 
 # ------------------------------------------------------- symbol packing
@@ -553,7 +668,13 @@ def compress_chunks(symbols: jnp.ndarray, cfg: LZSSConfig, orig_bytes=None):
     jax.jit, static_argnames=("symbol_size", "chunk_symbols", "n_chunks", "decoder")
 )
 def decompress_chunks(
-    blob, n_tokens, payload_sizes, *, symbol_size, chunk_symbols, n_chunks,
+    blob,
+    n_tokens,
+    payload_sizes,
+    *,
+    symbol_size,
+    chunk_symbols,
+    n_chunks,
     decoder="auto",
 ):
     """Jittable core: container bytes -> (nc, C) int32 symbols.
@@ -594,28 +715,74 @@ def compress_many_chunks(symbols: jnp.ndarray, cfg: LZSSConfig, orig_bytes=None)
     paper's many-buffer scenario (cf. Sitaridi et al.'s massively-parallel
     batch decompression).  ``orig_bytes`` is an optional (B,) int32 vector of
     true per-buffer byte counts for the headers.
+
+    A backend may own the whole batched dispatch via an optional
+    ``compress_many`` method (the multi-device ``"sharded"`` entry partitions
+    B over a mesh axis this way); the default is the vmapped single-buffer
+    core — the same optional-hook pattern as ``emit``.
     """
     if orig_bytes is None:
         b, nc, c = symbols.shape
         orig_bytes = jnp.full((b,), nc * c * cfg.symbol_size, jnp.int32)
-    return jax.vmap(lambda s_, o_: compress_chunks(s_, cfg, o_))(
-        symbols, orig_bytes
-    )
+    backend = get_backend(cfg.backend)
+    many = getattr(backend, "compress_many", None)
+    if many is not None:
+        return many(symbols, cfg, orig_bytes)
+    return jax.vmap(lambda s_, o_: compress_chunks(s_, cfg, o_))(symbols, orig_bytes)
 
 
 @functools.partial(
-    jax.jit, static_argnames=("symbol_size", "chunk_symbols", "n_chunks", "decoder")
+    jax.jit,
+    static_argnames=(
+        "symbol_size",
+        "chunk_symbols",
+        "n_chunks",
+        "decoder",
+        "mesh",
+        "batch_axis",
+    ),
 )
 def decompress_many_chunks(
-    blobs, n_tokens, payload_sizes, *, symbol_size, chunk_symbols, n_chunks,
+    blobs,
+    n_tokens,
+    payload_sizes,
+    *,
+    symbol_size,
+    chunk_symbols,
+    n_chunks,
     decoder="auto",
+    mesh=None,
+    batch_axis=None,
 ):
-    """Batched inverse: (B, L) blobs + (B, nc) tables -> (B, nc, C) symbols."""
+    """Batched inverse: (B, L) blobs + (B, nc) tables -> (B, nc, C) symbols.
+
+    A decoder may own the whole batched dispatch via an optional
+    ``decompress_many`` method — ``mesh``/``batch_axis`` are forwarded to it
+    (the ``"sharded"`` entry partitions B over the mesh axis; other decoders
+    never see them).  The default is the vmapped single-buffer core.
+    """
+    dec = get_decoder(decoder)
+    many = getattr(dec, "decompress_many", None)
+    if many is not None:
+        return many(
+            blobs,
+            n_tokens,
+            payload_sizes,
+            symbol_size=symbol_size,
+            chunk_symbols=chunk_symbols,
+            n_chunks=n_chunks,
+            mesh=mesh,
+            batch_axis=batch_axis,
+        )
     return jax.vmap(
         lambda b_, t_, p_: decompress_chunks(
-            b_, t_, p_,
-            symbol_size=symbol_size, chunk_symbols=chunk_symbols,
-            n_chunks=n_chunks, decoder=decoder,
+            b_,
+            t_,
+            p_,
+            symbol_size=symbol_size,
+            chunk_symbols=chunk_symbols,
+            n_chunks=n_chunks,
+            decoder=decoder,
         )
     )(blobs, n_tokens, payload_sizes)
 

@@ -9,10 +9,12 @@ pods, each leaf is:
      (+ optional error-feedback accumulator),
   2. GPULZ-compressed in-graph through the pipeline's batched entry point
      (``pipeline.compress_many_chunks`` — all slabs in one dispatch, symbols
-     ARE the codes, S=2), into a buffer **capped at the raw-int16 size** so
-     the exchange is never worse than 2 bytes/element (2x smaller than
-     bf16+fp32-master exchanges, more when the codes compress),
-  3. exchanged over the pod axis with ``lax.ppermute`` (ring for >2 pods),
+     ARE the codes, S=2), pinned pod-local via ``sharding.batch.shard_vmap``
+     (shard_map over the pod axis: each pod compresses the shard it already
+     owns), into a buffer **capped at the raw-int16 size** so the exchange is
+     never worse than 2 bytes/element (2x smaller than bf16+fp32-master
+     exchanges, more when the codes compress),
+  3. all-gathered over the pod axis (the only inter-pod traffic),
   4. decoded in-graph (tables parsed straight from the received blob) and
      averaged.
 
@@ -27,7 +29,6 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-from jax import lax
 
 from repro.core import format as fmt, pipeline
 from repro.core.pipeline import LZSSConfig
@@ -175,19 +176,26 @@ def pod_exchange_compressed(grad_stack, mesh, compress: bool = True,
 
     ``grad_stack`` leaves have a leading (n_pods,) dim sharded over "pod"
     (produced by vmap-ing the grad computation over a pod-split batch).  Each
-    pod's slice is compressed *while still pod-sharded*, the fixed-size wire
-    is replicated across the pod axis (an all-gather of compressed bytes —
-    the only inter-pod traffic), then every pod decodes all slices locally
-    and averages.  Expressed in pure pjit: no shard_map, no manual
-    collectives — the SPMD partitioner materializes exactly one pod-axis
-    all-gather per leaf, sized at the wire cap (2 bytes/elem or less).
+    pod's slice is compressed *where it lives* — ``sharding.batch.shard_vmap``
+    pins the per-pod compression inside ``shard_map(pod)``, so the
+    partitioner cannot choose to replicate the raw gradient first and
+    compress everywhere (which would put uncompressed bytes on the slow
+    inter-pod links).  The fixed-size wire is then replicated across the pod
+    axis (an all-gather of compressed bytes — the only inter-pod traffic),
+    and every pod decodes all slices locally and averages.
     """
     from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.sharding import batch as shbatch
 
     n_pods = mesh.shape["pod"]
     rep = lambda x: jax.lax.with_sharding_constraint(
         x, NamedSharding(mesh, P(*([None] * x.ndim)))
     )
+    # per-pod view: compression must stay pod-local, so a sharded batch
+    # config (mesh= / "sharded" keys) resolves to its single-device inner
+    # dispatch here — nesting shard_map(pod) inside shard_map would be wrong
+    local_cfg = shbatch.unsharded(cfg)
 
     def exchange_leaf(g):
         shape = g.shape[1:]
@@ -196,12 +204,14 @@ def pod_exchange_compressed(grad_stack, mesh, compress: bool = True,
             size *= s
         if not compress or size < MIN_COMPRESS_SIZE:
             return jnp.mean(rep(g).astype(jnp.float32), axis=0).astype(g.dtype)
-        wire = jax.vmap(lambda x: compress_leaf(x, cfg, ratio_cap))(g)
+        wire = shbatch.shard_vmap(
+            lambda x: compress_leaf(x, local_cfg, ratio_cap), mesh, "pod"
+        )(g)
         wire = jax.tree.map(rep, wire)  # <- compressed pod all-gather
         acc = 0.0
         for k in range(n_pods):
             wk = jax.tree.map(lambda x: x[k], wire)
-            acc = acc + decompress_leaf(wk, shape, cfg, ratio_cap)
+            acc = acc + decompress_leaf(wk, shape, local_cfg, ratio_cap)
         return (acc / n_pods).astype(g.dtype)
 
     return jax.tree.map(exchange_leaf, grad_stack)

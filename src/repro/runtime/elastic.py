@@ -5,7 +5,11 @@ and shardings are *derived* from logical axis rules per mesh — so scaling
 from 1 pod to 2 (or 16x16 to 8x32, or recovering with a dead slice cordoned
 off) is: build the new mesh, recompute shardings, restore.  Batch math
 (per-pod microbatching) rescales so the global batch — and therefore the
-training trajectory — is preserved.
+training trajectory — is preserved.  The GPULZ blobs themselves are
+mesh-agnostic too: when the manager's batched dispatch is shard-mapped
+(``lz_mesh``), ``restore_onto_mesh`` re-points decode sharding at the
+restore-side mesh, so a checkpoint compressed on an 8-device mesh restores
+on a 2-device one.
 """
 
 from __future__ import annotations
@@ -39,9 +43,22 @@ def plan_remesh(old_mesh, new_mesh) -> ElasticPlan:
 
 
 def restore_onto_mesh(manager, cfg, traincfg, new_mesh, template=None):
-    """Restore the latest checkpoint with shardings for ``new_mesh``."""
+    """Restore the latest checkpoint with shardings for ``new_mesh``.
+
+    When the manager's batched compression dispatch is shard-mapped
+    (``lz_mesh`` set, or the ``"sharded"`` decoder selected), the decode
+    shards must track the mesh we are restoring ONTO — not the (possibly
+    larger, possibly gone) mesh the checkpoint was written on.  Blobs are
+    mesh-agnostic bytes, so a step compressed on an 8-device mesh restores
+    on 2 devices by simply re-pointing ``lz_mesh`` here.
+    """
     if template is None:
         template = steps_lib.abstract_train_state(cfg, traincfg)
     shardings = steps_lib.train_state_shardings(cfg, traincfg, new_mesh)
+    if (
+        getattr(manager, "lz_mesh", None) is not None
+        or getattr(manager, "lz_decoder", None) == "sharded"
+    ):
+        manager = dataclasses.replace(manager, lz_mesh=new_mesh)
     state, step = manager.restore_latest(template, shardings)
     return state, step

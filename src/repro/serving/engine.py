@@ -32,7 +32,8 @@ class ServingEngine:
     def __init__(self, cfg, params, max_len: int = 512, kv_compress=False,
                  kv_offload: bool = False, block_tokens: int = 256,
                  budget_blocks: int = 1024, evict_every: int = 8,
-                 kv_decoder: str = "auto", kv_backend: str = "auto"):
+                 kv_decoder: str = "auto", kv_backend: str = "auto",
+                 kv_mesh=None, kv_batch_axis=None):
         self.cfg = cfg
         self.params = params
         self.max_len = max_len
@@ -40,9 +41,13 @@ class ServingEngine:
         self.evict_every = evict_every
         # kv_backend / kv_decoder: compressor/decoder registry keys for the
         # cold-block eviction and restore dispatches ("auto" = the fused
-        # fused-deflate emit pipeline / fused Pallas decoder on TPU)
+        # fused-deflate emit pipeline / fused Pallas decoder on TPU).
+        # kv_mesh shards each cold-block round's batch dim over a device
+        # mesh — KVBlockStore maps "auto" onto the "sharded" registry pair
+        # when a mesh is given (see sharding/batch.py).
         self.kv_store = KVBlockStore(compress=kv_compress, backend=kv_backend,
-                                     decoder=kv_decoder)
+                                     decoder=kv_decoder, mesh=kv_mesh,
+                                     batch_axis=kv_batch_axis)
         self.tracker = PagedKVTracker(block_tokens=block_tokens,
                                       budget_blocks=budget_blocks)
         self._step = jax.jit(

@@ -49,17 +49,39 @@ class KVBlockStore:
     ``"auto"`` = the fused-deflate emit pipeline / fused Pallas decoder on
     TPU) — batched evictions and restores dispatch through
     ``config.backend`` / ``config.decoder``.
+
+    ``mesh``/``batch_axis`` shard each eviction/restore round's batch
+    dimension over a device mesh (``sharding/batch.py``): backend and
+    decoder default to the ``"sharded"`` registry pair, which runs the
+    platform pipeline per shard — stored blobs stay byte-identical to the
+    single-device dispatch.
     """
 
     def __init__(self, compress: bool = True, config=None, decoder=None,
-                 backend=None):
+                 backend=None, mesh=None, batch_axis=None):
         self.compress = compress
         if config is None:
             config = KV_LZ
+        if mesh is None and batch_axis is not None:
+            # match LZSSConfig: a silently ignored batch_axis would read as
+            # "sharding configured" while dispatching single-device
+            raise ValueError("batch_axis requires mesh=...")
+        overrides = {}
         if backend is not None:
-            config = dataclasses.replace(config, backend=backend)
+            overrides["backend"] = backend
         if decoder is not None:
-            config = dataclasses.replace(config, decoder=decoder)
+            overrides["decoder"] = decoder
+        if mesh is not None:
+            # a mesh implies the sharded registry pair unless this call
+            # explicitly picked a different strategy ("auto" is not one)
+            if overrides.get("backend", "auto") == "auto":
+                overrides["backend"] = "sharded"
+            if overrides.get("decoder", "auto") == "auto":
+                overrides["decoder"] = "sharded"
+            overrides["mesh"] = mesh
+            overrides["batch_axis"] = batch_axis
+        if overrides:
+            config = dataclasses.replace(config, **overrides)
         self.config = config
         self._store: dict = {}
         self.stats = BlockStats()
@@ -117,9 +139,14 @@ class KVBlockStore:
                 h = lzss.fmt.parse_header(blob)
                 key = (h.symbol_size, h.chunk_symbols, h.n_chunks)
                 groups.setdefault(key, []).append(i)
+        # an explicitly non-sharded decoder + mesh means compress-side
+        # sharding only: restore single-device rather than conflicting
+        sharded = self.config.decoder in ("auto", "sharded")
         for idxs in groups.values():
             raws = lzss.decompress_many(
-                [popped[i][2] for i in idxs], decoder=self.config.decoder
+                [popped[i][2] for i in idxs], decoder=self.config.decoder,
+                mesh=self.config.mesh if sharded else None,
+                batch_axis=self.config.batch_axis if sharded else None,
             )
             for i, raw in zip(idxs, raws):
                 out[i] = self._reassemble(popped[i][1], raw)

@@ -1,3 +1,9 @@
+from repro.sharding.batch import (
+    ShardedBatchRunner,
+    normalize_batch_axes,
+    shard_vmap,
+    unsharded,
+)
 from repro.sharding.rules import (
     LOGICAL_RULES,
     activation_spec,
@@ -12,12 +18,16 @@ from repro.sharding.rules import (
 
 __all__ = [
     "LOGICAL_RULES",
+    "ShardedBatchRunner",
     "activation_spec",
     "batch_axes",
     "batch_spec",
+    "normalize_batch_axes",
     "params_pspecs",
     "params_shardings",
+    "shard_vmap",
     "spec_for",
+    "unsharded",
     "zero_shardings",
     "zero_spec",
 ]

@@ -15,20 +15,20 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 LOGICAL_RULES = {
     # embeddings
-    "vocab": "model",            # output/tied table rows
-    "vocab_in": "data",          # input table rows (d sharded on model)
+    "vocab": "model",  # output/tied table rows
+    "vocab_in": "data",  # input table rows (d sharded on model)
     "embed_sharded": "model",
-    "embed": "data",             # d_model inside weights: FSDP over data
+    "embed": "data",  # d_model inside weights: FSDP over data
     "embed_unsharded": None,
     "embed_out": "data",
     # attention
     "heads": "model",
     "kv_heads": "model",
     "head_dim": None,
-    "lora": None,                # MLA latent dims (replicated)
+    "lora": None,  # MLA latent dims (replicated)
     # mlp / moe
     "ffn": "model",
-    "experts": "model",          # expert parallelism
+    "experts": "model",  # expert parallelism
     "expert_ffn": None,
     # ssm
     "ssm_inner": "model",
@@ -123,8 +123,7 @@ def zero_spec(spec: P, shape: tuple, mesh: Mesh) -> P:
     """
     data = mesh.shape["data"]
     parts = list(spec) + [None] * (len(shape) - len(spec))
-    if any(p == "data" or (isinstance(p, tuple) and "data" in p)
-           for p in parts):
+    if any(p == "data" or (isinstance(p, tuple) and "data" in p) for p in parts):
         return P(*parts)  # already FSDP-sharded over data
     for i, (p, n) in enumerate(zip(parts, shape)):
         if p is None and n % data == 0 and n >= data:
@@ -153,7 +152,7 @@ def activation_spec(mesh: Mesh, batch_size: int) -> P:
 
 _BATCH_AXES: tuple = ("data",)
 _SEQ_PARALLEL = False  # shard T of the residual stream on "model"
-_DATA_SHARDS = 1       # batch-axes size (for per-shard MoE dispatch)
+_DATA_SHARDS = 1  # batch-axes size (for per-shard MoE dispatch)
 
 
 def set_activation_batch_axes(axes: tuple, data_shards: int = None):

@@ -210,9 +210,9 @@ def test_kvblockstore_uses_config_decoder(monkeypatch):
     seen = {}
     real = kvcache.lzss.decompress_many
 
-    def spy(batch, decoder="auto"):
+    def spy(batch, decoder="auto", mesh=None, batch_axis=None):
         seen["decoder"] = decoder
-        return real(batch, decoder=decoder)
+        return real(batch, decoder=decoder, mesh=mesh, batch_axis=batch_axis)
 
     monkeypatch.setattr(kvcache.lzss, "decompress_many", spy)
     store = kvcache.KVBlockStore(compress=True, decoder="xla-scan")

@@ -197,12 +197,34 @@ def test_compress_many_matches_per_item_compress():
 
 
 def test_decompress_many_rejects_mixed_geometry():
+    """The heterogeneous-batch error must name the offending buffer index
+    and both geometries (regression: it used to be a bare ValueError)."""
     cfg_a = lzss.LZSSConfig(symbol_size=1, window=16, chunk_symbols=64)
     cfg_b = lzss.LZSSConfig(symbol_size=2, window=16, chunk_symbols=64)
     a = lzss.compress(np.zeros(100, np.uint8), cfg_a)
     b = lzss.compress(np.zeros(100, np.uint8), cfg_b)
-    with pytest.raises(ValueError, match="homogeneous"):
+    with pytest.raises(ValueError, match="homogeneous") as ei:
         lzss.decompress_many([a.data, b.data])
+    msg = str(ei.value)
+    assert "buffer 0" in msg and "symbol_size=1" in msg
+    assert "buffer 1" in msg and "symbol_size=2" in msg
+    # the index reported is the first mismatching buffer, not just "1"
+    with pytest.raises(ValueError, match="buffer 2"):
+        lzss.decompress_many([a.data, a.data, b.data])
+    # ragged sizes with equal geometry (same chunk count) are fine
+    c = lzss.compress(np.arange(120, dtype=np.uint8), cfg_a)
+    outs = lzss.decompress_many([a.data, c.data])
+    assert np.array_equal(outs[1], np.arange(120, dtype=np.uint8))
+
+
+def test_decompress_many_mesh_requires_sharded_decoder():
+    cfg = lzss.LZSSConfig(symbol_size=1, window=16, chunk_symbols=64)
+    blob = lzss.compress(np.zeros(64, np.uint8), cfg)
+    import jax
+
+    mesh = jax.make_mesh((1,), ("data",))
+    with pytest.raises(ValueError, match="sharded"):
+        lzss.decompress_many([blob.data], decoder="xla-scan", mesh=mesh)
 
 
 def test_in_graph_batched_cores_roundtrip():
