@@ -4,21 +4,36 @@
 # offline CI container without an install step.
 #
 # CI (.github/workflows/ci.yml) runs: test-fast + bench-smoke + check-bench
-# on a Python 3.10/3.11 matrix, test-multidevice + bench-sharded-smoke in a
-# separate multidevice lane (8 forced host devices), and `ruff check` /
-# `ruff format --check` as a separate lint job.
+# on a Python 3.10/3.11 matrix (test-fast includes the golden-corpus format
+# pin, tests/test_golden.py), test-multidevice + bench-sharded-smoke in a
+# separate multidevice lane (8 forced host devices), test-property as its
+# own hypothesis lane, and `ruff check` / `ruff format --check` as a
+# separate lint job.
 
 PY ?= python
 
-.PHONY: test test-fast test-multidevice check-bench lint \
+.PHONY: test test-fast test-multidevice test-property check-bench lint \
 	bench-pipeline bench-decode bench-sharded bench-sharded-smoke \
 	bench-smoke bench
 
 test:
 	PYTHONPATH=src $(PY) -m pytest -x -q
 
+# test_properties.py is excluded here: its strategies deliberately mint
+# fresh jit traces per fuzzed geometry, which is the dedicated property
+# lane's job (test-property below) — running it in the 2x-Python CI matrix
+# would duplicate that wall-clock on every PR.  Plain `make test` still
+# includes it.
 test-fast:
-	PYTHONPATH=src $(PY) -m pytest -x -q -m "not slow"
+	PYTHONPATH=src $(PY) -m pytest -x -q -m "not slow" \
+		--ignore=tests/test_properties.py
+
+# Property-based lane (requires hypothesis: pip install -e .[test]).  The
+# ci-property profile (tests/conftest.py) derandomizes the example stream so
+# failures reproduce; statistics go to stdout for the CI artifact.
+test-property:
+	PYTHONPATH=src HYPOTHESIS_PROFILE=ci-property $(PY) -m pytest -q \
+		tests/test_properties.py --hypothesis-show-statistics
 
 # Sharding/batch tests with the test process itself seeing 8 (forced host)
 # devices: exercises the shard-mapped "sharded" compressor/decoder pair on
@@ -41,7 +56,7 @@ lint:
 		src/repro/core/pipeline.py
 
 bench-pipeline:
-	PYTHONPATH=src:. $(PY) benchmarks/fig9_throughput.py --backend fused-deflate
+	PYTHONPATH=src:. $(PY) benchmarks/fig9_throughput.py --backend fused-mono
 
 bench-decode:
 	PYTHONPATH=src:. $(PY) benchmarks/fig10_decode.py --decoder fused

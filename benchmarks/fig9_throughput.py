@@ -9,11 +9,12 @@ on this container's CPU, so the RATIO of the two numbers is the
 reproduction; absolute GB/s for TPU comes from §Roofline.
 
 ``--backend`` additionally sweeps the pipeline backends (xla baseline vs
-fused Pallas Kernel I vs the fully fused ``fused-deflate`` emit path) and
-records them in BENCH_pipeline.json — the perf trajectory of the backend
-refactors (see EXPERIMENTS.md §Pipeline).  On CPU the fused backends run
-their kernels in interpret mode, so their absolute numbers are NOT
-meaningful off-TPU; the JSON tags the platform."""
+fused Pallas Kernel I vs the fused ``fused-deflate`` emit path vs the
+single-kernel ``fused-mono`` compressor) and records them in
+BENCH_pipeline.json — the perf trajectory of the backend refactors (see
+EXPERIMENTS.md §Pipeline).  On CPU the fused backends run their kernels in
+interpret mode, so their absolute numbers are NOT meaningful off-TPU; the
+JSON tags the platform."""
 
 from __future__ import annotations
 
@@ -58,7 +59,7 @@ def culzss_workflow_seconds(data: np.ndarray, window=128, c=2048) -> float:
 
 def backend_sweep(
     data: np.ndarray,
-    backends=("xla", "fused", "fused-deflate"),
+    backends=("xla", "fused", "fused-deflate", "fused-mono"),
     sweep_nbytes: int = 1 << 16,
     out_json: str = "BENCH_pipeline.json",
     dataset: str = "hurr-quant",
@@ -107,7 +108,7 @@ def backend_sweep(
 
 
 def run(nbytes: int = 1 << 20, dataset: str = "hurr-quant",
-        backend: str = "fused-deflate", sweep_nbytes: int = 1 << 16,
+        backend: str = "fused-mono", sweep_nbytes: int = 1 << 16,
         out_json: str = "BENCH_pipeline.json"):
     print("# fig9: name,us_per_call,GB/s")
     data = datasets.load(dataset, nbytes)
@@ -130,12 +131,15 @@ def run(nbytes: int = 1 << 20, dataset: str = "hurr-quant",
          f"{t_culzss / t_gpulz:.1f}x|paper=22.2x-avg")
 
     # pipeline backend sweep: always include the xla baseline (and the
-    # Kernel-I-only fused backend when sweeping fused-deflate, so the JSON
-    # separates the Kernel-I win from the Kernel-II/III fusion win)
+    # intermediate fusion stages when sweeping the fully fused backends, so
+    # the JSON separates the Kernel-I win from the Kernel-II/III fusion win
+    # from the single-kernel fold)
     if backend == "xla":
         backends = ("xla",)
     elif backend == "fused-deflate":
         backends = ("xla", "fused", "fused-deflate")
+    elif backend == "fused-mono":
+        backends = ("xla", "fused", "fused-deflate", "fused-mono")
     else:
         backends = ("xla", backend)
     backend_sweep(data, backends=backends, sweep_nbytes=sweep_nbytes,
@@ -148,7 +152,7 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--nbytes", type=int, default=1 << 20)
     ap.add_argument("--dataset", default="hurr-quant")
-    ap.add_argument("--backend", default="fused-deflate",
+    ap.add_argument("--backend", default="fused-mono",
                     choices=sorted(lzss.available_backends()),
                     help="pipeline backend to sweep against the xla baseline")
     ap.add_argument("--sweep-nbytes", type=int, default=1 << 16,

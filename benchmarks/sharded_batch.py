@@ -52,7 +52,9 @@ def corpus(b: int, nbytes: int) -> list:
             rng.integers(0, 9, nbytes // 8).astype(np.uint16), 2
         ).view(np.uint8)
         noise = rng.integers(0, 256, nbytes // 4, dtype=np.uint16).view(np.uint8)
-        buf = np.concatenate([runs, noise])[:nbytes]
+        filler = rng.integers(0, 256, nbytes, dtype=np.uint8)
+        # pad with noise so any --nbytes works, not just multiples of 8
+        buf = np.concatenate([runs, noise, filler])[:nbytes]
         assert buf.size == nbytes
         out.append(buf.copy())
     return out

@@ -57,8 +57,8 @@ class CheckpointManager:
     keep: int = 3
     lz_window: int = 64
     lz_chunk: int = 4096
-    lz_backend: str = "auto"   # compressor registry key; "auto" = the fully
-                               # fused fused-deflate pipeline on TPU
+    lz_backend: str = "auto"   # compressor registry key; "auto" = the
+                               # single-kernel fused-mono pipeline on TPU
     lz_decoder: str = "auto"   # decode registry key; "auto" = fused on TPU
     lz_mesh: object = None     # shard each per-dtype-class batched dispatch
                                # over this mesh ("sharded" registry pair);

@@ -182,9 +182,9 @@ class CompressionConfig:
     grad_ratio_cap: float = 2.0      # fixed buffer = quantized_size / cap
     kv_eviction: bool = False        # compress cold KV blocks on eviction
     lz_backend: str = "auto"         # compressor backend registry key
-                                     # (core/pipeline.py); "auto" = the fully
-                                     # fused fused-deflate pipeline on TPU,
-                                     # unfused xla elsewhere
+                                     # (core/pipeline.py); "auto" = the
+                                     # single-kernel fused-mono compressor
+                                     # on TPU, unfused xla elsewhere
     lz_decoder: str = "auto"         # decode registry key; "auto" = fused
                                      # Pallas decoder on TPU, xla-parallel
                                      # elsewhere

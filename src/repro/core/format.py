@@ -127,6 +127,13 @@ def write_header_and_tables(out, *, symbol_size, window, chunk_symbols,
 def parse_header(blob: np.ndarray) -> Header:
     """Host-side header parse (numpy uint8 array)."""
     blob = np.asarray(blob, np.uint8)
+    if blob.size < HEADER_BYTES:
+        # before any field access: a chopped prefix can keep a valid magic
+        # (blob[:4]) and then index out of bounds on the fixed fields
+        raise ValueError(
+            f"truncated container: the header alone is {HEADER_BYTES} bytes "
+            f"but only {blob.size} bytes are present"
+        )
     if tuple(int(b) for b in blob[:4]) != MAGIC:
         raise ValueError("bad magic: not a GPULZ container")
     if int(blob[4]) != VERSION:
@@ -153,6 +160,97 @@ def parse_tables(blob: np.ndarray, header: Header):
     a = blob[header.sec_a : header.sec_a + 4 * nc].view(np.uint32).copy()
     b = blob[header.sec_b : header.sec_b + 4 * nc].view(np.uint32).copy()
     return a.astype(np.int32), b.astype(np.int32)
+
+
+def validate_container(blob: np.ndarray, header: Header | None = None):
+    """Host-side sanity check before a blob is handed to the decoder.
+
+    The in-graph decode path is bounds-checked but *silent*: a truncated or
+    table-corrupted container would decode to garbage symbols instead of
+    failing.  This raises a ``ValueError`` naming the expected vs actual
+    byte counts (or the offending table entry) first.  Returns the parsed
+    ``(header, n_tokens, payload_sizes)`` so callers don't parse twice.
+
+    Header-geometry corruption detection is best-effort: the checks catch
+    every truncation, out-of-range field and table inconsistency, but a
+    flipped field whose corrupted value describes a *different valid
+    container over the same tables* (e.g. symbol_size 2 -> 4 when every
+    chunk is all-pointers) is indistinguishable without decoding — that is
+    what the containers' checksummed transport (checkpoint files, KV
+    store) is for.
+    """
+    blob = np.asarray(blob, np.uint8)
+    h = parse_header(blob) if header is None else header
+    # geometry fields first: a flipped header byte (e.g. symbol_size 1->2)
+    # passes every byte-count cross-check below and would decode to silent
+    # garbage; re-apply the write-side invariants
+    if h.symbol_size not in (1, 2, 4):
+        raise ValueError(
+            f"corrupted container: symbol_size {h.symbol_size} not in (1, 2, 4)"
+        )
+    if not 1 <= h.window <= 255:
+        raise ValueError(
+            f"corrupted container: window {h.window} not in [1, 255]"
+        )
+    if h.chunk_symbols <= 0 or h.chunk_symbols % 8:
+        raise ValueError(
+            f"corrupted container: chunk_symbols {h.chunk_symbols} is not a "
+            f"positive multiple of 8"
+        )
+    if h.n_chunks < 1:
+        raise ValueError(f"corrupted container: n_chunks {h.n_chunks} < 1")
+    if blob.size < h.total_bytes:
+        raise ValueError(
+            f"truncated container: header declares {h.total_bytes} bytes "
+            f"({HEADER_BYTES} header + {8 * h.n_chunks} tables + "
+            f"{h.flag_bytes} flags + {h.payload_bytes} payload) but only "
+            f"{blob.size} bytes are present"
+        )
+    n_tokens, payload_sizes = parse_tables(blob, h)
+    c, s = h.chunk_symbols, h.symbol_size
+    for name, table, cap in (
+        ("n_tokens", n_tokens, c),
+        ("payload_sizes", payload_sizes, c * s),
+    ):
+        bad = np.nonzero((table < 0) | (table > cap))[0]
+        if bad.size:
+            i = int(bad[0])
+            raise ValueError(
+                f"corrupted container: table {name}[{i}] = {int(table[i])} "
+                f"exceeds the per-chunk bound {cap} "
+                f"(C={c}, S={s})"
+            )
+    # per-chunk token/byte consistency: a chunk's payload is 2 bytes per
+    # pointer + S per literal, so min(2, S)*n_tokens <= payload_sizes <=
+    # max(2, S)*n_tokens must hold chunk-wise.  This is what actually trips
+    # on a flipped symbol_size byte (e.g. 1 -> 2 forces equality at
+    # 2*n_tokens, which real mixed chunks don't satisfy) — the membership
+    # checks above can't, because {1, 2, 4} are all legal values.
+    lo_b = min(2, s) * n_tokens
+    hi_b = max(2, s) * n_tokens
+    bad = np.nonzero((payload_sizes < lo_b) | (payload_sizes > hi_b))[0]
+    if bad.size:
+        i = int(bad[0])
+        raise ValueError(
+            f"corrupted container: chunk {i} has payload_sizes={int(payload_sizes[i])} "
+            f"outside [{int(lo_b[i])}, {int(hi_b[i])}] implied by "
+            f"n_tokens={int(n_tokens[i])} and symbol_size={s}"
+        )
+    flag_total = int(((n_tokens + 7) // 8).sum())
+    pay_total = int(payload_sizes.sum())
+    if flag_total != h.flag_bytes or pay_total != h.payload_bytes:
+        raise ValueError(
+            f"corrupted container: header declares {h.flag_bytes} flag + "
+            f"{h.payload_bytes} payload bytes but the per-chunk tables sum "
+            f"to {flag_total} + {pay_total}"
+        )
+    if h.orig_bytes > h.n_chunks * c * s:
+        raise ValueError(
+            f"corrupted container: orig_bytes {h.orig_bytes} exceeds the "
+            f"chunk capacity {h.n_chunks * c * s} "
+            f"(n_chunks={h.n_chunks}, C={c}, S={s})"
+        )
+    return h, n_tokens, payload_sizes
 
 
 def parse_tables_jax(blob_i32, n_chunks: int):

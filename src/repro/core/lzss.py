@@ -4,9 +4,10 @@
     `------------- Kernel I -------------'    `-- Kernel II --'   `Kernel III'
 
 The pipeline is pluggable (core/pipeline.py): ``LZSSConfig(backend=...)``
-selects the Kernel-I strategy AND the emit tail — ``fused-deflate`` (the TPU
-``"auto"`` default) runs fused Pallas kernels for the whole chain, from
-matching through the Kernel-III deflate-scatter.
+selects the Kernel-I strategy AND the emit tail — ``fused-mono`` (the TPU
+``"auto"`` default) runs the whole chain, from matching through the
+Kernel-III deflate-scatter, in ONE Pallas kernel (``fused-deflate`` keeps
+the three-launch split as the fallback).
 ``compress_chunks`` / ``compress_many_chunks`` are the fully jittable cores
 (fixed shapes, usable in-graph for gradient/KV compression); ``compress`` /
 ``decompress`` and ``compress_many`` / ``decompress_many`` are host-facing
@@ -108,8 +109,9 @@ def decompress(blob, decoder: str = "auto") -> np.ndarray:
     (``available_decoders()``; ``"auto"`` = fused Pallas decoder on TPU).
     """
     blob = np.asarray(blob, np.uint8)
-    h = fmt.parse_header(blob)
-    n_tokens, payload_sizes = fmt.parse_tables(blob, h)
+    # raises ValueError (expected vs actual byte counts) on truncated or
+    # table-corrupted blobs instead of decoding garbage symbols
+    h, n_tokens, payload_sizes = fmt.validate_container(blob)
     full = np.zeros(_dispatch_capacity(blob.size), np.uint8)
     full[: blob.size] = blob
     symbols = decompress_chunks(
@@ -208,7 +210,12 @@ def decompress_many(
     (``sharding/batch.py``); symbols are identical to the single-device
     dispatch.  Returns a list of uint8 arrays.
     """
-    if mesh is not None:
+    if mesh is None:
+        if batch_axis is not None:
+            # mirror LZSSConfig.__post_init__: a batch_axis without a mesh
+            # would otherwise be silently dropped by the vmap default path
+            raise ValueError("batch_axis requires mesh=...")
+    else:
         if decoder not in ("auto", "sharded"):
             raise ValueError(
                 f"mesh= shards the dispatch through the 'sharded' decoder; "
@@ -224,7 +231,14 @@ def decompress_many(
         ]
     else:
         blobs = [np.asarray(b, np.uint8) for b in batch]
-    headers = [fmt.parse_header(b) for b in blobs]
+    headers, tables = [], []
+    for i, b in enumerate(blobs):
+        try:
+            h, n_tok, pay = fmt.validate_container(b)
+        except ValueError as e:
+            raise ValueError(f"buffer {i}: {e}") from None
+        headers.append(h)
+        tables.append((n_tok, pay))
     h0 = headers[0]
     for i, h in enumerate(headers[1:], start=1):
         if (h.symbol_size, h.chunk_symbols, h.n_chunks) != (
@@ -238,7 +252,6 @@ def decompress_many(
                 f"chunk_symbols={h.chunk_symbols}, n_chunks={h.n_chunks}); "
                 f"decompress mismatched containers individually"
             )
-    tables = [fmt.parse_tables(b, h) for b, h in zip(blobs, headers)]
     width = _dispatch_capacity(max(b.size for b in blobs))
     stacked = np.zeros((len(blobs), width), np.uint8)
     for i, b in enumerate(blobs):

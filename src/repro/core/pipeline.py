@@ -42,14 +42,23 @@ Registered backends:
                     in one VMEM-resident kernel; the redundant XLA selection
                     and local prefix sum are skipped entirely.  The emit
                     tail stays XLA.
-  ``fused-deflate`` the paper's headline configuration (workflow (d)) end to
-                    end: fused Kernel I plus a fused Kernel II+III
+  ``fused-deflate`` fused Kernel I plus a fused Kernel II+III
                     (kernels/lz_scatter.py) — one kernel computes both
                     global exclusive prefix sums, a second rebuilds the
                     flag/payload sections in VMEM and scatters them into the
                     blob via scalar-prefetched per-chunk offsets.  The
                     aligned (nc, C//8)/(nc, C*S) section arrays never
-                    materialize in HBM.
+                    materialize in HBM, but the (nc, C) Kernel-I outputs
+                    still round-trip through it between the launches.
+  ``fused-mono``    the paper's workflow (d) end to end in ONE kernel
+                    (kernels/lz_fused.py): matching, selection, both local
+                    AND global prefix sums (SMEM carry over the sequential
+                    grid), section rebuild and the blob scatter — no
+                    intermediate of any shape touches HBM, and the blob is
+                    written through per-chunk DMA windows instead of a
+                    VMEM-resident (1, cap) block, so containers are not
+                    bounded by VMEM.  Owns the whole single-buffer path via
+                    the optional ``compress`` hook (see below).
   ``sharded``       multi-device batch layer (sharding/batch.py): the B
                     dimension of the batched entry points is shard-mapped
                     over ``LZSSConfig(mesh=..., batch_axis=...)`` and every
@@ -79,17 +88,21 @@ xla-parallel elsewhere — resolved at dispatch, like ``default_backend()``)
 or the legacy aliases ``"parallel"``/``"scan"``, which are normalized to
 registry keys at construction.
 
-On TPU ``fused-deflate`` is the default hot path; elsewhere the kernels
-execute in interpret mode, so the default stays ``xla`` (identical bytes, no
+On TPU ``fused-mono`` is the default hot path (``REPRO_FUSED_MONO=0`` falls
+back to the split ``fused-deflate`` pipeline, e.g. while auditing the mono
+kernel's Mosaic lowering on new hardware); elsewhere the kernels execute in
+interpret mode, so the default stays ``xla`` (identical bytes, no
 interpreter overhead).  All backends produce byte-identical containers and
 all decoders identical symbols — property- and sweep-tested in
-tests/test_pipeline.py and tests/test_decoders.py.
+tests/test_pipeline.py, tests/test_decoders.py, tests/test_conformance.py
+and the golden corpus under tests/golden/.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import functools
+import os
 from typing import Dict, Protocol
 
 import jax
@@ -102,8 +115,17 @@ from repro.core import deflate, encode, format as fmt, match
 
 
 def default_backend() -> str:
-    """The preferred compressor backend for the current accelerator."""
-    return "fused-deflate" if jax.default_backend() == "tpu" else "xla"
+    """The preferred compressor backend for the current accelerator.
+
+    On TPU the single-kernel ``fused-mono`` compressor is the hot path;
+    setting ``REPRO_FUSED_MONO=0`` falls back to the split ``fused-deflate``
+    pipeline (byte-identical output, three launches instead of one).
+    """
+    if jax.default_backend() != "tpu":
+        return "xla"
+    if os.environ.get("REPRO_FUSED_MONO", "1") == "0":
+        return "fused-deflate"
+    return "fused-mono"
 
 
 def default_decoder() -> str:
@@ -171,18 +193,12 @@ class LZSSConfig:
                 "mesh=... is only consulted by the 'sharded' compressor/"
                 "decoder; set backend='sharded' and/or decoder='sharded'"
             )
-        axes = (
-            (self.batch_axis,)
-            if isinstance(self.batch_axis, str)
-            else self.batch_axis
-        )
-        if axes is not None:
-            missing = [a for a in axes if a not in self.mesh.axis_names]
-            if missing:
-                raise ValueError(
-                    f"batch_axis {missing} not in mesh axes "
-                    f"{tuple(self.mesh.axis_names)}"
-                )
+        if self.batch_axis is not None:
+            # single source of truth for axis validation (same check the
+            # runner applies at dispatch); lazy import to avoid a cycle
+            from repro.sharding import batch as shbatch
+
+            shbatch.normalize_batch_axes(self.mesh, self.batch_axis)
 
     @property
     def min_match(self) -> int:
@@ -210,6 +226,13 @@ class CompressorBackend(Protocol):
     (global prefix sums + deflate-scatter + header); ``compress_chunks``
     falls back to the shared XLA tail ``emit_xla`` when absent, so
     Kernel-I-only backends keep working unchanged.
+
+    A backend that fuses the *entire* pipeline (there is no Kernel-I/emit
+    seam left to split at) may instead define
+    ``compress(symbols, cfg, orig_bytes)`` -> ``(buffer u8[cap],
+    total_bytes)`` and own the whole single-buffer path — checked before
+    ``kernel1``/``emit`` by ``compress_chunks``.  ``fused-mono`` is the
+    canonical user.
     """
 
     name: str
@@ -246,8 +269,8 @@ def register_backend(
 def resolve_backend(name: str) -> str:
     """Normalize a backend selector to a registered key.
 
-    Accepts registry keys and ``auto`` (the fully fused ``fused-deflate``
-    pipeline on TPU, xla elsewhere) — the compress-side mirror of
+    Accepts registry keys and ``auto`` (the single-kernel ``fused-mono``
+    compressor on TPU, xla elsewhere) — the compress-side mirror of
     ``resolve_decoder``.
     """
     if name == "auto":
@@ -368,7 +391,55 @@ class FusedDeflateBackend(FusedBackend):
             sec_flags=fmt.HEADER_BYTES + 8 * nc,
         )
         return _finalize_container(
-            out, k1, cfg, orig_bytes, flag_total=flag_total, pay_total=pay_total
+            out,
+            cfg,
+            orig_bytes,
+            nc=nc,
+            c=c,
+            n_tokens=k1["n_tokens"],
+            payload_sizes=k1["payload_sizes"],
+            flag_total=flag_total,
+            pay_total=pay_total,
+        )
+
+
+class FusedMonoBackend(FusedBackend):
+    """The whole compressor in ONE Pallas kernel (kernels/lz_fused.py):
+    Kernel I per chunk block, both global prefix sums as an SMEM carry over
+    the sequential grid, section rebuild in VMEM and the blob scatter
+    through per-chunk DMA windows into an HBM-resident buffer.  Nothing —
+    not even the (nc, C) Kernel-I outputs — round-trips through HBM, and
+    the output is tiled, so containers are not bounded by VMEM.
+
+    Owns the full single-buffer path via the ``compress`` hook; the
+    inherited ``kernel1`` (fused Kernel I) exists only for callers that
+    want the match metadata by itself."""
+
+    name = "fused-mono"
+
+    def compress(self, symbols, cfg, orig_bytes=None):
+        from repro.kernels import ops  # lazy: kernels are optional at import
+
+        nc, c = symbols.shape
+        s = cfg.symbol_size
+        out, n_tokens, payload_sizes, flag_total, pay_total = ops.lz_fused_mono(
+            symbols,
+            window=cfg.window,
+            min_match=cfg.min_match,
+            symbol_size=s,
+            cap=fmt.max_compressed_bytes(nc * c * s, s, c),
+            sec_flags=fmt.HEADER_BYTES + 8 * nc,
+        )
+        return _finalize_container(
+            out,
+            cfg,
+            orig_bytes,
+            nc=nc,
+            c=c,
+            n_tokens=n_tokens,
+            payload_sizes=payload_sizes,
+            flag_total=flag_total,
+            pay_total=pay_total,
         )
 
 
@@ -388,9 +459,8 @@ class ShardedCompressor:
     def kernel1(self, symbols, cfg):
         return get_backend("auto").kernel1(symbols, cfg)
 
-    def emit(self, symbols, k1, cfg, orig_bytes=None):
-        inner = get_backend("auto")
-        return getattr(inner, "emit", emit_xla)(symbols, k1, cfg, orig_bytes)
+    def compress(self, symbols, cfg, orig_bytes=None):
+        return _compress_via(get_backend("auto"), symbols, cfg, orig_bytes)
 
     def compress_many(self, symbols, cfg, orig_bytes):
         from repro.sharding import batch as shbatch  # lazy: avoid cycle
@@ -404,6 +474,7 @@ register_backend(XlaScanBackend())
 register_backend(PallasMatchBackend())
 register_backend(FusedBackend())
 register_backend(FusedDeflateBackend())
+register_backend(FusedMonoBackend())
 register_backend(ShardedCompressor())
 
 
@@ -586,15 +657,16 @@ def unpack_symbols(symbols: jnp.ndarray, symbol_size: int) -> jnp.ndarray:
 # ------------------------------------------------------- jittable cores
 
 
-def _finalize_container(out, k1, cfg, orig_bytes, *, flag_total, pay_total):
+def _finalize_container(
+    out, cfg, orig_bytes, *, nc, c, n_tokens, payload_sizes, flag_total, pay_total
+):
     """Write header + A/B tables into a section-filled byte buffer.
 
     ``out`` is a (cap,) int32 buffer whose flag/payload sections are already
-    in place and whose header/table region [0, HEADER_BYTES + 8*nc) is still
-    zero — both emit tails produce exactly that.  Returns the finished
-    ``(buffer u8, total_bytes)``.
+    in place and whose header/table region [0, HEADER_BYTES + 8*nc) carries
+    no live bytes — every emit tail produces exactly that.  Returns the
+    finished ``(buffer u8, total_bytes)``.
     """
-    nc, c = k1["lengths"].shape
     s = cfg.symbol_size
     out = fmt.write_header_and_tables(
         out,
@@ -605,8 +677,8 @@ def _finalize_container(out, k1, cfg, orig_bytes, *, flag_total, pay_total):
         orig_bytes=nc * c * s if orig_bytes is None else orig_bytes,
         payload_total=pay_total,
         flag_total=flag_total,
-        n_tokens=k1["n_tokens"],
-        payload_sizes=k1["payload_sizes"],
+        n_tokens=n_tokens,
+        payload_sizes=payload_sizes,
     )
     total = fmt.HEADER_BYTES + 8 * nc + flag_total + pay_total
     return out.astype(jnp.uint8), total
@@ -640,7 +712,15 @@ def emit_xla(symbols, k1, cfg, orig_bytes=None):
         out, sec_flags + flag_total, payload, k1["payload_sizes"], pay_off
     )
     return _finalize_container(
-        out, k1, cfg, orig_bytes, flag_total=flag_total, pay_total=pay_total
+        out,
+        cfg,
+        orig_bytes,
+        nc=nc,
+        c=c,
+        n_tokens=k1["n_tokens"],
+        payload_sizes=k1["payload_sizes"],
+        flag_total=flag_total,
+        pay_total=pay_total,
     )
 
 
@@ -656,9 +736,18 @@ def compress_chunks(symbols: jnp.ndarray, cfg: LZSSConfig, orig_bytes=None):
     Both pipeline stages dispatch through the backend registry: Kernel I via
     ``backend.kernel1`` and the emit tail (Kernels II+III + header) via the
     backend's optional ``emit`` method, defaulting to the shared XLA tail
-    ``emit_xla``.
+    ``emit_xla``.  A backend with no Kernel-I/emit seam (the single-kernel
+    ``fused-mono``) owns the whole path via the optional ``compress`` hook
+    instead.
     """
-    backend = get_backend(cfg.backend)
+    return _compress_via(get_backend(cfg.backend), symbols, cfg, orig_bytes)
+
+
+def _compress_via(backend, symbols, cfg, orig_bytes=None):
+    """Run one backend's single-buffer pipeline, honoring its hooks."""
+    whole = getattr(backend, "compress", None)
+    if whole is not None:
+        return whole(symbols, cfg, orig_bytes)
     k1 = backend.kernel1(symbols, cfg)
     emit = getattr(backend, "emit", emit_xla)
     return emit(symbols, k1, cfg, orig_bytes)

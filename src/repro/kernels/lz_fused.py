@@ -1,0 +1,303 @@
+"""Single-kernel GPULZ compressor: Kernels I+II+III in ONE Pallas kernel.
+
+The ``fused-deflate`` pipeline (kernels/lz_match.py + lz_scatter.py) still
+splits matching from emit across three kernel launches, so the (nc, C)
+match/flag/length intermediates of Kernel I round-trip through HBM before
+the deflate-scatter re-reads them — the last HBM round-trip the paper's
+workflow (d) removes (Fig. 4(c) vs (d); cf. the end-to-end-residency lesson
+of Sitaridi et al., *Massively-Parallel Lossless Data Decompression*).  This
+module folds the whole compressor into one kernel:
+
+  * **Kernel I** per chunk block: multi-byte matching, the selection walk
+    and the local prefix sums (shared helpers ``_match_values`` /
+    ``_select_and_scan`` from lz_match.py) — intermediates never leave VMEM.
+  * **Kernel II** as a running carry: TPU grid steps execute sequentially,
+    so BOTH global exclusive prefix sums degenerate to two SMEM scalars
+    accumulated across blocks (the single-pass analogue of CUB's decoupled
+    look-back) — no separate offsets kernel, no (nc,) offset arrays in HBM.
+  * **Kernel III** as per-chunk DMA windows: the compact flag/payload bytes
+    are rebuilt in VMEM (``_build_sections`` from lz_scatter.py) and DMA'd
+    to the output blob at the carried offsets.  The blob lives in HBM
+    (``memory_space=ANY``) and is only ever touched through per-chunk VMEM
+    windows — unlike lz_scatter's (1, cap) VMEM-resident output block, so
+    containers are no longer bounded by what fits in VMEM (~4 MiB).
+
+Layout trick: a chunk's final payload offset depends on the TOTAL flag
+section size, which a single forward sweep only knows after the last chunk.
+The kernel therefore stages the payload stream at a fixed base past the
+worst-case flag section and appends a short *slide* phase to the same grid:
+after the last block, ``f_tot`` is known, and the remaining grid steps DMA
+the staged payload down to ``sec_flags + f_tot`` window by window (windows
+are masked to the live payload, so the slide simultaneously zero-fills
+everything from the live end to the buffer top — stale staging bytes
+included).  Forward order makes the move hazard-free: every destination
+window lies strictly below its source.
+
+Byte-identity with the XLA pipeline is enforced by tests/test_pipeline.py,
+tests/test_conformance.py and the golden corpus (tests/golden/); the
+one-launch property by the pallas-call counter test.  Real-TPU caveats
+(DMA granularity of byte-offset windows, scalar VMEM reads in the row loop)
+are tracked in ROADMAP.md.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.lz_match import (
+    MAX_LEN_CAP,
+    _levels,
+    _match_values,
+    _pad_chunks,
+    _select_and_scan,
+)
+from repro.kernels.lz_scatter import _build_sections
+
+
+def _mono_kernel(
+    bt_ref,  # scalar prefetch: per-step block index (clamped past phase A)
+    sym_ref,
+    out_ref,  # (1, cap_alloc) int32 byte blob, HBM-resident (ANY)
+    ntok_ref,
+    psz_ref,
+    tot_ref,
+    len_s,
+    emit_s,
+    fbuf,
+    pbuf,
+    slidebuf,
+    carry,  # SMEM [flag_off, pay_off] running across the sequential grid
+    sems,
+    *,
+    window,
+    max_len,
+    min_match,
+    symbol_size,
+    nc,
+    nb,
+    sec_flags,
+    stage,
+    cap_alloc,
+):
+    i = pl.program_id(0)
+    g, c = sym_ref.shape
+    s = symbol_size
+    cb = c // 8
+    bufsz = c * s
+    sw = g * bufsz  # slide window = one block's worth of payload bytes
+
+    @pl.when(i == 0)
+    def _init():
+        carry[0] = 0
+        carry[1] = 0
+
+    @pl.when(i < nb)
+    def _compress_block():
+        # ---- Kernel I: match + select + local prefix sums, all in VMEM ----
+        lengths, offsets = _match_values(
+            sym_ref[...], window=window, max_len=max_len
+        )
+        len_s[...] = lengths
+        emitted, um, _, local_off, psz, ntok = _select_and_scan(
+            len_s, emit_s, lengths, min_match=min_match, symbol_size=s
+        )
+        ntok_ref[...] = ntok
+        psz_ref[...] = psz
+
+        # ---- encode tail: compact section bytes for the whole block -------
+        fbyte, prow = _build_sections(
+            sym_ref[...],
+            lengths,
+            offsets,
+            emitted.astype(jnp.int32),
+            um.astype(jnp.int32),
+            local_off,
+            ntok,
+            psz,
+            symbol_size=s,
+        )
+        fbuf[...] = fbyte
+        pbuf[...] = prow
+
+        # ---- Kernels II+III: carry the global offsets, DMA the windows ----
+        # Each chunk writes a full aligned window at its carried offset; the
+        # next chunk's window starts inside it and overwrites the dead tail,
+        # so consecutive windows deflate the stream without any RMW blend.
+        # Payload goes to a staging base past the worst-case flag section
+        # (final placement needs f_tot — see module docstring).
+        for row in range(g):
+            ci = i * g + row
+
+            @pl.when(ci < nc)
+            def _emit_row(row=row):
+                fo = carry[0]
+                po = carry[1]
+                fdma = pltpu.make_async_copy(
+                    fbuf.at[pl.dslice(row, 1), :],
+                    out_ref.at[:, pl.dslice(sec_flags + fo, cb)],
+                    sems.at[0],
+                )
+                pdma = pltpu.make_async_copy(
+                    pbuf.at[pl.dslice(row, 1), :],
+                    out_ref.at[:, pl.dslice(stage + po, bufsz)],
+                    sems.at[1],
+                )
+                fdma.start()
+                pdma.start()
+                fdma.wait()
+                pdma.wait()
+                carry[0] = fo + (ntok[row] + 7) // 8
+                carry[1] = po + psz[row]
+
+    @pl.when(i >= nb)
+    def _slide():
+        # ---- slide phase: staged payload -> sec_flags + f_tot -------------
+        k = i - nb
+        f_tot = carry[0]
+        p_tot = carry[1]
+
+        @pl.when(i == nb)
+        def _totals():
+            lane = lax.broadcasted_iota(jnp.int32, tot_ref.shape, 1)
+            tot_ref[...] = jnp.where(
+                lane == 0, f_tot, jnp.where(lane == 1, p_tot, 0)
+            )
+
+        # Clamped windows only ever move zeros (the mask below kills every
+        # byte past p_tot long before the clamps can engage), so reading
+        # garbage at the clamped source is harmless.
+        src = jnp.minimum(stage + k * sw, cap_alloc - sw)
+        rd = pltpu.make_async_copy(
+            out_ref.at[:, pl.dslice(src, sw)], slidebuf, sems.at[2]
+        )
+        rd.start()
+        rd.wait()
+        jg = k * sw + lax.broadcasted_iota(jnp.int32, (1, sw), 1)
+        slidebuf[...] = jnp.where(jg < p_tot, slidebuf[...], 0)
+        dst = jnp.minimum(sec_flags + f_tot + k * sw, cap_alloc - sw)
+        wr = pltpu.make_async_copy(
+            slidebuf, out_ref.at[:, pl.dslice(dst, sw)], sems.at[2]
+        )
+        wr.start()
+        wr.wait()
+
+
+def _cost(nc, c, s, window, levels):
+    # Kernel I dominates: per (position, offset) eq + doubling levels, plus
+    # the section rebuild's binary searches and the slide's byte traffic.
+    lg = _levels(c, c)
+    flops = nc * c * (window * (2 + 3 * levels + 5) + 2 * lg + 8 + 4 * s)
+    return pl.CostEstimate(
+        flops=flops,
+        bytes_accessed=nc * c * 4 + 3 * nc * ((c + 7) // 8 + c * s),
+        transcendentals=0,
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "window",
+        "min_match",
+        "symbol_size",
+        "cap",
+        "sec_flags",
+        "max_len",
+        "chunks_per_block",
+        "interpret",
+    ),
+)
+def lz_fused_mono_pallas(
+    symbols,
+    *,
+    window,
+    min_match,
+    symbol_size,
+    cap,
+    sec_flags,
+    max_len=MAX_LEN_CAP,
+    chunks_per_block=8,
+    interpret=False,
+):
+    """ONE kernel: (nc, C) int32 symbols -> deflated container sections.
+
+    Returns ``(blob, n_tokens, payload_sizes, flag_total, pay_total)``:
+    ``blob`` is a (cap,) int32 byte buffer with the compact flag section at
+    ``sec_flags``, the payload section right after it, zeros from the live
+    end to ``cap``, and the header/table region [0, sec_flags) left for the
+    caller to fill (``pipeline._finalize_container``); the (nc,) tables and
+    the two section totals are the same values the split pipeline computes.
+    """
+    x = symbols.astype(jnp.int32)
+    nc, c = x.shape
+    if c % 8:
+        raise ValueError(f"chunk size must be a multiple of 8: {c}")
+    g = chunks_per_block
+    x, _ = _pad_chunks(x, g)
+    npad = x.shape[0]
+    nb = npad // g
+    s = symbol_size
+    cb = c // 8
+    bufsz = c * s
+    sw = g * bufsz
+    # staging base: one window of slack past the worst-case flag section, so
+    # the last real chunk's full-width flag window can spill dead bytes
+    # without touching staged payload
+    stage = sec_flags + nc * cb + cb
+    # alloc: staging extent + spill + two slide windows of slack for the
+    # offset clamps; the format-visible prefix [0, cap) is sliced off below
+    cap_alloc = stage + nc * bufsz + bufsz + 2 * sw
+    assert cap <= cap_alloc
+    nslide = -(-(nc * (cb + bufsz) + cb + bufsz) // sw) + 2
+    nsteps = nb + nslide
+    bt = jnp.minimum(jnp.arange(nsteps, dtype=jnp.int32), nb - 1)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(nsteps,),
+        in_specs=[pl.BlockSpec((g, c), lambda i, bt_: (bt_[i], 0))],
+        out_specs=[
+            pl.BlockSpec(memory_space=pltpu.ANY),
+            pl.BlockSpec((g,), lambda i, bt_: (bt_[i],)),
+            pl.BlockSpec((g,), lambda i, bt_: (bt_[i],)),
+            pl.BlockSpec((1, 128), lambda i, bt_: (0, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((g, c), jnp.int32),  # lengths (dynamic-column walk)
+            pltpu.VMEM((g, c), jnp.int32),  # emitted (dynamic-column walk)
+            pltpu.VMEM((g, cb), jnp.int32),  # block flag bytes
+            pltpu.VMEM((g, bufsz), jnp.int32),  # block payload bytes
+            pltpu.VMEM((1, sw), jnp.int32),  # slide window
+            pltpu.SMEM((2,), jnp.int32),  # running [flag_off, pay_off]
+            pltpu.SemaphoreType.DMA((3,)),
+        ],
+    )
+    out, ntok, psz, tot = pl.pallas_call(
+        functools.partial(
+            _mono_kernel,
+            window=window,
+            max_len=max_len,
+            min_match=min_match,
+            symbol_size=s,
+            nc=nc,
+            nb=nb,
+            sec_flags=sec_flags,
+            stage=stage,
+            cap_alloc=cap_alloc,
+        ),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((1, cap_alloc), jnp.int32),
+            jax.ShapeDtypeStruct((npad,), jnp.int32),
+            jax.ShapeDtypeStruct((npad,), jnp.int32),
+            jax.ShapeDtypeStruct((1, 128), jnp.int32),
+        ],
+        cost_estimate=_cost(npad, c, s, window, _levels(window, max_len)),
+        interpret=interpret,
+    )(bt, x)
+    return out[0, :cap], ntok[:nc], psz[:nc], tot[0, 0], tot[0, 1]

@@ -93,24 +93,17 @@ def _match_kernel(x_ref, len_ref, off_ref, *, window, max_len):
     off_ref[...] = offsets
 
 
-def _fused_kernel(
-    x_ref,
-    len_ref,
-    off_ref,
-    emit_ref,
-    lo_ref,
-    paysz_ref,
-    ntok_ref,
-    *,
-    window,
-    max_len,
-    min_match,
-    symbol_size,
-):
-    g, c = x_ref.shape
-    lengths, offsets = _match_values(x_ref[...], window=window, max_len=max_len)
-    len_ref[...] = lengths
-    off_ref[...] = offsets
+def _select_and_scan(len_ref, emit_ref, lengths, *, min_match, symbol_size):
+    """Selection walk + local prefix sums, VMEM-resident.
+
+    ``len_ref`` must already hold ``lengths``; ``emit_ref`` is the scratch
+    the walk's dynamic-column stores go through and holds the 0/1 emitted
+    mask on return.  Returns ``(emitted, use_match, sizes, local_off,
+    payload_sizes, n_tokens)`` values — the per-position arrays are (g, C),
+    the per-chunk reductions (g,).  Shared by the fused Kernel I below and
+    the single-kernel compressor (lz_fused.py).
+    """
+    g, c = len_ref.shape
 
     # --- encode walk (paper: one thread per block; here: lanes via dynamic
     # column access, all `g` chunks in lockstep on sublanes) ----------------
@@ -137,9 +130,32 @@ def _fused_kernel(
         incl = incl + _shift_right_zero(incl, k, idx)
         ntok = ntok + _shift_right_zero(ntok, k, idx)
         k *= 2
-    lo_ref[...] = incl - sizes            # exclusive local offsets
-    paysz_ref[...] = incl[:, c - 1]       # per-chunk compressed payload bytes
-    ntok_ref[...] = ntok[:, c - 1]        # per-chunk token count (flag bits)
+    return emitted, use_match, sizes, incl - sizes, incl[:, c - 1], ntok[:, c - 1]
+
+
+def _fused_kernel(
+    x_ref,
+    len_ref,
+    off_ref,
+    emit_ref,
+    lo_ref,
+    paysz_ref,
+    ntok_ref,
+    *,
+    window,
+    max_len,
+    min_match,
+    symbol_size,
+):
+    lengths, offsets = _match_values(x_ref[...], window=window, max_len=max_len)
+    len_ref[...] = lengths
+    off_ref[...] = offsets
+    _, _, _, local_off, paysz, ntok = _select_and_scan(
+        len_ref, emit_ref, lengths, min_match=min_match, symbol_size=symbol_size
+    )
+    lo_ref[...] = local_off               # exclusive local offsets
+    paysz_ref[...] = paysz                # per-chunk compressed payload bytes
+    ntok_ref[...] = ntok                  # per-chunk token count (flag bits)
 
 
 def _pad_chunks(symbols, gsz):

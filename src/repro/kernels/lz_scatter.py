@@ -101,6 +101,61 @@ def lz_global_offsets_pallas(n_tokens, payload_sizes, *, interpret=False):
 # --------------------------------------- pass 2: encode tail + Kernel III
 
 
+def _build_sections(
+    sym, lengths, offsets, emitted, um, local_off, ntok, psz, *, symbol_size
+):
+    """Rebuild the per-chunk compact section bytes from Kernel-I outputs.
+
+    All inputs are int32 values: (g, C) per-position arrays plus the (g,)
+    per-chunk ``ntok``/``psz`` reductions.  Returns ``(flag_bytes (g, C//8),
+    payload (g, C*S))`` with zeros past each chunk's live size — everything
+    stays in registers/VMEM (rank->position binary search instead of
+    ``pack_flags``'s scatter-add, which has no efficient Mosaic lowering).
+    Shared by the deflate-scatter kernel below and the single-kernel
+    compressor (lz_fused.py).
+    """
+    g, c = sym.shape
+    s = symbol_size
+    cb = c // 8
+    bufsz = c * s
+    t = lax.broadcasted_iota(jnp.int32, (g, c), 1)
+
+    # token rank -> chunk position: ranks[i] = tokens before position i is
+    # nondecreasing, so the position of rank r is the last i with
+    # ranks[i] <= r (pack_flags computes the same map as a scatter-add).
+    ranks = _prefix_sum_excl(emitted, t, c)
+    tok_pos = _search_last_le(ranks, t, c)
+
+    valid_r = (t < ntok[:, None]).astype(jnp.int32)
+    fbit = jnp.take_along_axis(um, tok_pos, axis=1) * valid_r
+
+    # flag bytes: bit j of byte b is token (8b+j)'s kind (format.py layout)
+    bidx = lax.broadcasted_iota(jnp.int32, (g, cb), 1)
+    fbyte = jnp.zeros((g, cb), jnp.int32)
+    for j in range(8):
+        fbyte = fbyte + (jnp.take_along_axis(fbit, 8 * bidx + j, axis=1) << j)
+
+    # token write offsets in rank space (sentinel bufsz keeps the row
+    # sorted past n_tokens), then payload byte p -> covering token
+    lo_r = jnp.take_along_axis(local_off, tok_pos, axis=1)
+    tok_off = jnp.where(valid_r == 1, lo_r, bufsz)
+    p = lax.broadcasted_iota(jnp.int32, (g, bufsz), 1)
+    r_of_p = _search_last_le(tok_off, p, c)
+    i_p = jnp.take_along_axis(tok_pos, r_of_p, axis=1)
+    b_p = p - jnp.take_along_axis(tok_off, r_of_p, axis=1)
+    um_p = jnp.take_along_axis(um, i_p, axis=1)
+    ptr = jnp.where(
+        b_p == 0,
+        jnp.take_along_axis(lengths, i_p, axis=1),
+        jnp.take_along_axis(offsets, i_p, axis=1),
+    )
+    sym_p = jnp.take_along_axis(sym, i_p, axis=1)
+    lit = (sym_p >> (8 * jnp.clip(b_p, 0, 3))) & 0xFF
+    val = jnp.where(um_p == 1, ptr, lit)
+    prow = jnp.where(p < psz[:, None], val, 0)
+    return fbyte, prow
+
+
 def _scatter_kernel(
     fo_ref,
     po_ref,
@@ -125,47 +180,19 @@ def _scatter_kernel(
         out_ref[...] = jnp.zeros(out_ref.shape, out_ref.dtype)
 
     g, c = sym_ref.shape
-    s = symbol_size
     cb = c // 8
-    bufsz = c * s
-    emitted = emit_ref[...]
-    um = um_ref[...]
-    t = lax.broadcasted_iota(jnp.int32, (g, c), 1)
-
-    # token rank -> chunk position: ranks[i] = tokens before position i is
-    # nondecreasing, so the position of rank r is the last i with
-    # ranks[i] <= r (pack_flags computes the same map as a scatter-add).
-    ranks = _prefix_sum_excl(emitted, t, c)
-    tok_pos = _search_last_le(ranks, t, c)
-
-    ntok = nt_ref[...]
-    valid_r = (t < ntok[:, None]).astype(jnp.int32)
-    fbit = jnp.take_along_axis(um, tok_pos, axis=1) * valid_r
-
-    # flag bytes: bit j of byte b is token (8b+j)'s kind (format.py layout)
-    bidx = lax.broadcasted_iota(jnp.int32, (g, cb), 1)
-    fbyte = jnp.zeros((g, cb), jnp.int32)
-    for j in range(8):
-        fbyte = fbyte + (jnp.take_along_axis(fbit, 8 * bidx + j, axis=1) << j)
-
-    # token write offsets in rank space (sentinel bufsz keeps the row
-    # sorted past n_tokens), then payload byte p -> covering token
-    lo_r = jnp.take_along_axis(lo_ref[...], tok_pos, axis=1)
-    tok_off = jnp.where(valid_r == 1, lo_r, bufsz)
-    p = lax.broadcasted_iota(jnp.int32, (g, bufsz), 1)
-    r_of_p = _search_last_le(tok_off, p, c)
-    i_p = jnp.take_along_axis(tok_pos, r_of_p, axis=1)
-    b_p = p - jnp.take_along_axis(tok_off, r_of_p, axis=1)
-    um_p = jnp.take_along_axis(um, i_p, axis=1)
-    ptr = jnp.where(
-        b_p == 0,
-        jnp.take_along_axis(len_ref[...], i_p, axis=1),
-        jnp.take_along_axis(off_ref[...], i_p, axis=1),
+    bufsz = c * symbol_size
+    fbyte, prow = _build_sections(
+        sym_ref[...],
+        len_ref[...],
+        off_ref[...],
+        emit_ref[...],
+        um_ref[...],
+        lo_ref[...],
+        nt_ref[...],
+        ps_ref[...],
+        symbol_size=symbol_size,
     )
-    sym_p = jnp.take_along_axis(sym_ref[...], i_p, axis=1)
-    lit = (sym_p >> (8 * jnp.clip(b_p, 0, 3))) & 0xFF
-    val = jnp.where(um_p == 1, ptr, lit)
-    prow = jnp.where(p < ps_ref[...][:, None], val, 0)
 
     # Kernel III: blend each chunk's compact prefix into the blob at its
     # global offset (RMW merge over a full-width window; grid steps run

@@ -11,6 +11,7 @@ from __future__ import annotations
 import jax
 
 from repro.kernels import lz_decode as _dec_impl
+from repro.kernels import lz_fused as _mono_impl
 from repro.kernels import lz_match as _impl
 from repro.kernels import lz_scatter as _scat_impl
 
@@ -84,6 +85,36 @@ def lz_scatter(
         symbol_size=symbol_size,
         cap=cap,
         sec_flags=sec_flags,
+        chunks_per_block=chunks_per_block,
+        interpret=_interpret(),
+    )
+
+
+def lz_fused_mono(
+    symbols,
+    *,
+    window,
+    min_match,
+    symbol_size,
+    cap,
+    sec_flags,
+    max_len=_impl.MAX_LEN_CAP,
+    chunks_per_block=8,
+):
+    """Single-kernel compressor (Kernels I+II+III folded, tiled output).
+
+    Returns ``(blob, n_tokens, payload_sizes, flag_total, pay_total)``: one
+    Pallas launch produces the deflated flag/payload sections of a container
+    (header region left zero) plus the per-chunk tables and section totals.
+    """
+    return _mono_impl.lz_fused_mono_pallas(
+        symbols,
+        window=window,
+        min_match=min_match,
+        symbol_size=symbol_size,
+        cap=cap,
+        sec_flags=sec_flags,
+        max_len=max_len,
         chunks_per_block=chunks_per_block,
         interpret=_interpret(),
     )

@@ -133,7 +133,8 @@ def train_step_compressed(state, batch, *, cfg, traincfg, mesh):
         return _grads_and_metrics(state["params"], cfg, traincfg, mb)
 
     # "auto" backend/decoder resolve per-platform inside the pipeline
-    # (on TPU: the fused-deflate emit path + fused Pallas decoder)
+    # (on TPU: the single-kernel fused-mono compressor + fused Pallas
+    # decoder)
     lz_cfg = dataclasses.replace(
         grad_compress.GRAD_LZ,
         backend=traincfg.compression.lz_backend,

@@ -34,10 +34,11 @@ from repro.core import format as fmt, pipeline
 from repro.core.pipeline import LZSSConfig
 
 # backend/decoder default to "auto": the in-graph compress emits through
-# the fused-deflate Kernel I+II+III pipeline and the decode dispatches the
-# fused Pallas decoder on TPU; unfused xla / xla-parallel elsewhere
-# (core/pipeline.py registry).  Resolution happens at dispatch time, so
-# importing this module never initializes the JAX platform.
+# the single-kernel fused-mono compressor (Kernels I+II+III in ONE Pallas
+# launch) and the decode dispatches the fused Pallas decoder on TPU;
+# unfused xla / xla-parallel elsewhere (core/pipeline.py registry).
+# Resolution happens at dispatch time, so importing this module never
+# initializes the JAX platform.
 GRAD_LZ = LZSSConfig(symbol_size=2, window=32, chunk_symbols=2048,
                      backend="auto")
 MIN_COMPRESS_SIZE = 65_536  # leaves below this exchange raw (graph economy)

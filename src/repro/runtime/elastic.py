@@ -59,6 +59,22 @@ def restore_onto_mesh(manager, cfg, traincfg, new_mesh, template=None):
         getattr(manager, "lz_mesh", None) is not None
         or getattr(manager, "lz_decoder", None) == "sharded"
     ):
-        manager = dataclasses.replace(manager, lz_mesh=new_mesh)
+        # lz_batch_axis must track the mesh swap: the axis the checkpoint
+        # was written with may not exist on the restore-side mesh (e.g. a
+        # ("pod", "data") save restoring onto a ("data",) mesh).  Keep an
+        # explicitly configured axis when the new mesh still has it; only
+        # when it is gone fall back to None so normalize_batch_axes
+        # re-derives the batch axes from the restore-side mesh.
+        axis = getattr(manager, "lz_batch_axis", None)
+        if axis is not None:
+            from repro.sharding.batch import normalize_batch_axes
+
+            try:
+                normalize_batch_axes(new_mesh, axis)
+            except ValueError:
+                axis = None
+        manager = dataclasses.replace(
+            manager, lz_mesh=new_mesh, lz_batch_axis=axis
+        )
     state, step = manager.restore_latest(template, shardings)
     return state, step

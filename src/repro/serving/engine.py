@@ -40,8 +40,9 @@ class ServingEngine:
         self.kv_offload = kv_offload
         self.evict_every = evict_every
         # kv_backend / kv_decoder: compressor/decoder registry keys for the
-        # cold-block eviction and restore dispatches ("auto" = the fused
-        # fused-deflate emit pipeline / fused Pallas decoder on TPU).
+        # cold-block eviction and restore dispatches ("auto" = the
+        # single-kernel fused-mono compressor / fused Pallas decoder on
+        # TPU).
         # kv_mesh shards each cold-block round's batch dim over a device
         # mesh — KVBlockStore maps "auto" onto the "sharded" registry pair
         # when a mesh is given (see sharding/batch.py).

@@ -20,8 +20,8 @@ import numpy as np
 from repro.core import lzss
 
 # Geometry for KV blocks (S=2 over bf16).  backend/decoder stay "auto" —
-# resolved per-platform at dispatch time ("auto" = the fully fused
-# fused-deflate emit path on TPU) — so importing this module never
+# resolved per-platform at dispatch time ("auto" = the single-kernel
+# fused-mono compressor on TPU) — so importing this module never
 # initializes the JAX platform as a side effect.
 KV_LZ = lzss.LZSSConfig(
     symbol_size=2, window=64, chunk_symbols=2048, backend="auto"
@@ -46,7 +46,7 @@ class KVBlockStore:
 
     ``backend`` overrides the eviction-path compressor strategy and
     ``decoder`` the restore-path decode strategy (registry keys; default
-    ``"auto"`` = the fused-deflate emit pipeline / fused Pallas decoder on
+    ``"auto"`` = the fused-mono single-kernel pipeline / fused Pallas decoder on
     TPU) — batched evictions and restores dispatch through
     ``config.backend`` / ``config.decoder``.
 

@@ -17,7 +17,7 @@ the decompression-side version of the same argument).
     axes from ``sharding/rules.py`` — ``("pod", "data")`` when a pod axis
     exists, else ``("data",)``);
   * every shard runs the *existing* registered backend/decoder — the
-    auto-resolved platform default (``fused-deflate``/``fused`` on TPU,
+    auto-resolved platform default (``fused-mono``/``fused`` on TPU,
     ``xla``/``xla-parallel`` elsewhere) — so per-buffer blobs are
     byte-identical to the single-device dispatch by construction;
   * the ragged per-buffer blobs gather back as the same ``(B, cap)`` buffer +

@@ -88,11 +88,14 @@ def test_bench_pipeline_artifact_schema():
     assert rec["benchmark"] == "fig9_backend_sweep"
     assert isinstance(rec["platform"], str)
     assert isinstance(rec["interpret_mode"], bool)
-    assert {"xla", "fused", "fused-deflate"} <= set(rec["backends"])
+    assert {"xla", "fused", "fused-deflate", "fused-mono"} <= set(
+        rec["backends"]
+    )
     for name, entry in rec["backends"].items():
         _check_timing_entry(f"backends[{name}]", entry)
     assert rec["fused_over_xla"] > 0
     assert rec["fused_deflate_over_xla"] > 0
+    assert rec["fused_mono_over_xla"] > 0
 
 
 def test_bench_decode_artifact_schema():

@@ -59,7 +59,10 @@ def test_backend_auto_symmetry(monkeypatch):
 
     assert lzss.LZSSConfig(backend="auto").backend == "auto"
     monkeypatch.setattr(jax, "default_backend", lambda: "tpu")
+    assert pipeline.resolve_backend("auto") == "fused-mono"
+    monkeypatch.setenv("REPRO_FUSED_MONO", "0")
     assert pipeline.resolve_backend("auto") == "fused-deflate"
+    monkeypatch.delenv("REPRO_FUSED_MONO")
     monkeypatch.setattr(jax, "default_backend", lambda: "cpu")
     assert pipeline.resolve_backend("auto") == "xla"
     # and the auto config compresses to the same container as the resolved key

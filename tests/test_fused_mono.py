@@ -1,0 +1,185 @@
+"""Single-kernel compressor (backend ``fused-mono``, kernels/lz_fused.py):
+byte-identity sweeps, the one-Pallas-launch property, and the tiled output
+path for containers larger than one VMEM window.
+
+The S x {W32..255} identity sweep itself lives in tests/test_pipeline.py
+(fused-mono rides the same parametrization as fused / fused-deflate); this
+file covers what is unique to the mono kernel."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import format as fmt, lzss
+from repro.kernels import lz_fused
+
+
+def _corpus(seed, n=1500, dtype=np.uint16):
+    rng = np.random.default_rng(seed)
+    runs = np.repeat(rng.integers(0, 16, n // 4), rng.integers(1, 8, n // 4))
+    noise = rng.integers(0, 256, n // 4)
+    return np.concatenate([runs, noise, runs]).astype(dtype)[:n]
+
+
+# ------------------------------------------------ one Pallas launch, total
+
+
+def _count_pallas_calls(fn, monkeypatch):
+    """Invoke ``fn`` while counting every ``pl.pallas_call`` site executed
+    (at trace time — callers must use fresh geometry to avoid jit caches)."""
+    from jax.experimental import pallas as pl_mod
+
+    calls = {"n": 0}
+    real = pl_mod.pallas_call
+
+    def counting(*args, **kwargs):
+        calls["n"] += 1
+        return real(*args, **kwargs)
+
+    monkeypatch.setattr(pl_mod, "pallas_call", counting)
+    fn()
+    return calls["n"]
+
+
+def test_fused_mono_is_exactly_one_pallas_call(monkeypatch):
+    """The whole compressor — matching through blob scatter — must be ONE
+    kernel launch; the split fused-deflate pipeline takes three."""
+    data = _corpus(21)
+    # unusual geometries => fresh jit traces, so kernel entries are observed
+    kw = dict(symbol_size=2, window=29, chunk_symbols=72)
+    n = _count_pallas_calls(
+        lambda: lzss.compress(data, lzss.LZSSConfig(backend="fused-mono", **kw)),
+        monkeypatch,
+    )
+    assert n == 1
+
+    kw = dict(symbol_size=2, window=30, chunk_symbols=72)
+    n = _count_pallas_calls(
+        lambda: lzss.compress(
+            data, lzss.LZSSConfig(backend="fused-deflate", **kw)
+        ),
+        monkeypatch,
+    )
+    assert n == 3  # kernel1 + global offsets + deflate-scatter
+
+
+def test_fused_mono_routes_through_mono_kernel(monkeypatch):
+    """backend='fused-mono' must enter ops.lz_fused_mono; the split backends
+    must not."""
+    from repro.kernels import ops
+
+    calls = {"n": 0}
+    real = ops.lz_fused_mono
+
+    def counting(*args, **kwargs):
+        calls["n"] += 1
+        return real(*args, **kwargs)
+
+    monkeypatch.setattr(ops, "lz_fused_mono", counting)
+    data = _corpus(22)
+    kw = dict(symbol_size=2, window=33, chunk_symbols=80)
+    lzss.compress(data, lzss.LZSSConfig(backend="xla", **kw))
+    lzss.compress(data, lzss.LZSSConfig(backend="fused-deflate", **kw))
+    assert calls["n"] == 0
+    lzss.compress(data, lzss.LZSSConfig(backend="fused-mono", **kw))
+    assert calls["n"] == 1
+
+
+# ------------------------------------------------------- tiled blob output
+
+
+def _slide_window_bytes(chunk_symbols, symbol_size, chunks_per_block=8):
+    """One output tile of the mono kernel (the per-step DMA window)."""
+    return chunks_per_block * chunk_symbols * symbol_size
+
+
+def test_container_larger_than_one_output_tile_roundtrips():
+    """cap > one VMEM output window => the blob is assembled across many
+    slide-phase DMA windows; bytes must still match xla exactly."""
+    kw = dict(symbol_size=1, window=32, chunk_symbols=128)
+    data = _corpus(23, n=48 * 128, dtype=np.uint8)
+    cap = fmt.max_compressed_bytes(data.size, 1, 128)
+    assert cap > 4 * _slide_window_bytes(128, 1)  # genuinely multi-window
+    a = lzss.compress(data, lzss.LZSSConfig(backend="xla", **kw))
+    b = lzss.compress(data, lzss.LZSSConfig(backend="fused-mono", **kw))
+    assert a.total_bytes == b.total_bytes
+    assert np.array_equal(a.data, b.data)
+    assert np.array_equal(lzss.decompress(b.data), data)
+
+
+def test_incompressible_worst_case_fills_the_container():
+    """All-literal input drives every clamp in the slide phase (payload ==
+    worst case, flag section == worst case) — the staging slide must still
+    land every byte and zero the staging region."""
+    rng = np.random.default_rng(24)
+    data = rng.integers(0, 256, 13 * 64, dtype=np.int64).astype(np.uint8)
+    kw = dict(symbol_size=1, window=255, chunk_symbols=64)
+    a = lzss.compress(data, lzss.LZSSConfig(backend="xla", **kw))
+    b = lzss.compress(data, lzss.LZSSConfig(backend="fused-mono", **kw))
+    assert np.array_equal(a.data, b.data)
+    assert np.array_equal(lzss.decompress(b.data), data)
+
+
+@pytest.mark.slow
+def test_large_container_tiled_scatter_roundtrips():
+    """A container far beyond one output window (the old (1, cap) VMEM-
+    resident blob ceiling): 256 KiB through the tiled path, interpret mode."""
+    rng = np.random.default_rng(25)
+    n = 1 << 18
+    data = np.repeat(rng.integers(0, 64, n // 4), 4).astype(np.uint8)[:n]
+    kw = dict(symbol_size=2, window=32, chunk_symbols=2048)
+    cap = fmt.max_compressed_bytes(n, 2, 2048)
+    assert cap > 8 * _slide_window_bytes(2048, 2)
+    b = lzss.compress(data, lzss.LZSSConfig(backend="fused-mono", **kw))
+    a = lzss.compress(data, lzss.LZSSConfig(backend="xla", **kw))
+    assert a.total_bytes == b.total_bytes
+    assert np.array_equal(a.data, b.data)
+    assert np.array_equal(lzss.decompress(b.data), data)
+
+
+# ------------------------------------------------------------ API plumbing
+
+
+def test_fused_mono_batched_paths_identical():
+    """compress_many (vmapped compress hook) emits the same containers as
+    the per-buffer path (equal sizes => same chunk geometry), and ragged
+    batches still roundtrip."""
+    rng = np.random.default_rng(26)
+    same = [rng.integers(0, 4, 700).astype(np.uint8) for _ in range(3)]
+    cfg = lzss.LZSSConfig(
+        symbol_size=1, window=32, chunk_symbols=128, backend="fused-mono"
+    )
+    batch = lzss.compress_many(same, cfg)
+    for b, item in enumerate(same):
+        assert np.array_equal(batch[b].data, lzss.compress(item, cfg).data)
+    ragged = [rng.integers(0, 4, sz).astype(np.uint8) for sz in (700, 1, 2000)]
+    outs = lzss.decompress_many(lzss.compress_many(ragged, cfg))
+    for item, out in zip(ragged, outs):
+        assert np.array_equal(out, item)
+
+
+def test_auto_prefers_fused_mono_on_tpu(monkeypatch):
+    from repro.core import pipeline
+
+    monkeypatch.setattr(jax, "default_backend", lambda: "tpu")
+    assert pipeline.default_backend() == "fused-mono"
+    # explicit fallback to the split pipeline stays available
+    monkeypatch.setenv("REPRO_FUSED_MONO", "0")
+    assert pipeline.default_backend() == "fused-deflate"
+    monkeypatch.setattr(jax, "default_backend", lambda: "cpu")
+    assert pipeline.default_backend() == "xla"
+
+
+def test_mono_kernel_rejects_unaligned_chunk():
+    import jax.numpy as jnp
+
+    with pytest.raises(ValueError, match="multiple of 8"):
+        lz_fused.lz_fused_mono_pallas(
+            jnp.zeros((1, 12), jnp.int32),
+            window=8,
+            min_match=2,
+            symbol_size=1,
+            cap=256,
+            sec_flags=56,
+            interpret=True,
+        )

@@ -1,0 +1,144 @@
+"""Golden-blob conformance corpus: the on-disk container format is pinned.
+
+Every case compresses a tiny deterministic input (per dtype x S x W) and
+compares the container byte-for-byte against the blob checked in under
+``tests/golden/``.  Any silent change to the wire format — header layout,
+table encoding, section order, token encoding — fails here with an
+explicit "bump the format version" message instead of shipping containers
+old readers can't parse.
+
+Regenerate (ONLY after an intentional format change, together with a
+``core/format.py`` ``VERSION`` bump):
+
+    PYTHONPATH=src python tests/test_golden.py --regen
+"""
+
+import pathlib
+
+import numpy as np
+import pytest
+
+from repro.core import format as fmt, lzss
+
+GOLDEN_DIR = pathlib.Path(__file__).resolve().parent / "golden"
+
+REGEN_HINT = (
+    "container bytes changed for a checked-in golden input — the on-disk "
+    "format drifted. If this is intentional, bump VERSION in core/format.py "
+    "and regenerate the corpus: PYTHONPATH=src python tests/test_golden.py "
+    "--regen. If not, the change is a wire-format regression."
+)
+
+
+def _u8_runs(rng):
+    return np.repeat(rng.integers(0, 12, 80), rng.integers(1, 6, 80)).astype(
+        np.uint8
+    )[:256]
+
+
+def _i16_deltas(rng):
+    steps = rng.integers(-3, 4, 160).cumsum().astype(np.int16)
+    return np.concatenate([steps, steps[:48]])
+
+
+def _i32_ramp(rng):
+    base = (np.arange(72, dtype=np.int32) * 9973) % 1024
+    return np.concatenate([base, base[:24], rng.integers(0, 1 << 20, 16)]).astype(
+        np.int32
+    )
+
+
+def _f32_waves(rng):
+    x = np.sin(np.linspace(0.0, 4.0, 96)).astype(np.float32)
+    x[20:28] = np.nan
+    x[40:44] = np.inf
+    x[44:48] = -np.inf
+    return np.concatenate([x, x[:32]])
+
+
+def _u8_noise(rng):
+    return rng.integers(0, 256, 200).astype(np.uint8)
+
+
+# name -> (input builder, symbol_size, window, chunk_symbols); seeds fixed
+# per case so the corpus is reproducible bit-for-bit
+CASES = {
+    "u8_s1_w32_c64": (_u8_runs, 1, 32, 64),
+    "u8_s1_w255_c64": (_u8_noise, 1, 255, 64),
+    "i16_s2_w64_c64": (_i16_deltas, 2, 64, 64),
+    "i16_s2_w128_c128": (_i16_deltas, 2, 128, 128),
+    "i32_s4_w128_c64": (_i32_ramp, 4, 128, 64),
+    "f32_s4_w64_c64": (_f32_waves, 4, 64, 64),
+    "f32_s4_w255_c128": (_f32_waves, 4, 255, 128),
+}
+
+
+def _case_cfg(name):
+    _, s, w, c = CASES[name]
+    return lzss.LZSSConfig(symbol_size=s, window=w, chunk_symbols=c, backend="xla")
+
+
+def _golden_paths(name):
+    return GOLDEN_DIR / f"{name}.input.bin", GOLDEN_DIR / f"{name}.gplz"
+
+
+def _load_case(name):
+    """Checked-in input bytes + golden container bytes.
+
+    The inputs are stored on disk too (not regenerated from the builders at
+    test time): np.sin and Generator bit-streams are not guaranteed stable
+    across numpy versions/platforms, and an input drift would masquerade as
+    a format regression."""
+    inp, gold = _golden_paths(name)
+    for path in (inp, gold):
+        assert path.exists(), (
+            f"golden file {path.name} missing — regenerate the corpus: "
+            f"PYTHONPATH=src python tests/test_golden.py --regen"
+        )
+    return (
+        np.frombuffer(inp.read_bytes(), np.uint8),
+        np.frombuffer(gold.read_bytes(), np.uint8),
+    )
+
+
+@pytest.mark.parametrize("name", sorted(CASES))
+def test_golden_blob_is_stable(name):
+    data, golden = _load_case(name)
+    res = lzss.compress(data, _case_cfg(name))
+    assert res.data.size == golden.size and np.array_equal(res.data, golden), (
+        f"{name}: {REGEN_HINT}"
+    )
+
+
+@pytest.mark.parametrize("name", sorted(CASES))
+def test_golden_blob_decodes_to_input(name):
+    """The checked-in bytes (not just freshly produced ones) must decode —
+    this is what guards real backward readability of shipped containers."""
+    data, golden = _load_case(name)
+    h = fmt.parse_header(golden)
+    assert h.symbol_size == CASES[name][1] and h.window == CASES[name][2]
+    assert np.array_equal(lzss.decompress(golden), data)
+
+
+def _regen():
+    GOLDEN_DIR.mkdir(exist_ok=True)
+    for name in sorted(CASES):
+        build = CASES[name][0]
+        # seeds must not depend on PYTHONHASHSEED: derive from the name bytes
+        seed = int.from_bytes(name.encode(), "little") % (1 << 32)
+        data = build(np.random.default_rng(seed))
+        raw = np.ascontiguousarray(data).view(np.uint8).reshape(-1)
+        res = lzss.compress(raw, _case_cfg(name))
+        inp, gold = _golden_paths(name)
+        inp.write_bytes(bytes(raw))
+        gold.write_bytes(bytes(res.data))
+        print(f"wrote {gold} ({res.total_bytes} bytes, ratio {res.ratio:.2f})")
+
+
+if __name__ == "__main__":
+    import sys
+
+    if "--regen" in sys.argv:
+        _regen()
+    else:
+        sys.exit("usage: python tests/test_golden.py --regen")

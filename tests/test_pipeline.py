@@ -24,9 +24,14 @@ def _corpus(seed, n=1500):
 
 
 def test_registry_lists_all_backends():
-    assert {"xla", "xla-scan", "pallas-match", "fused", "fused-deflate"} <= set(
-        lzss.available_backends()
-    )
+    assert {
+        "xla",
+        "xla-scan",
+        "pallas-match",
+        "fused",
+        "fused-deflate",
+        "fused-mono",
+    } <= set(lzss.available_backends())
 
 
 def test_unknown_backend_rejected():
@@ -83,7 +88,7 @@ def test_register_backend_duplicate_raises():
 # ----------------------- fused / fused-deflate == xla, bit for bit
 
 
-@pytest.mark.parametrize("backend", ["fused", "fused-deflate"])
+@pytest.mark.parametrize("backend", ["fused", "fused-deflate", "fused-mono"])
 @pytest.mark.parametrize("symbol_size", [1, 2, 4])
 @pytest.mark.parametrize("level", [1, 2, 3, 4])
 def test_fused_container_identical_to_xla(backend, symbol_size, level):
@@ -225,6 +230,10 @@ def test_decompress_many_mesh_requires_sharded_decoder():
     mesh = jax.make_mesh((1,), ("data",))
     with pytest.raises(ValueError, match="sharded"):
         lzss.decompress_many([blob.data], decoder="xla-scan", mesh=mesh)
+    # batch_axis without a mesh is a silent no-op upstream of the vmap
+    # default path — reject it like LZSSConfig does (review fix)
+    with pytest.raises(ValueError, match="batch_axis requires mesh"):
+        lzss.decompress_many([blob.data], batch_axis="data")
 
 
 def test_in_graph_batched_cores_roundtrip():

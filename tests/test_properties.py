@@ -12,6 +12,7 @@ pytest.importorskip("hypothesis")
 
 from hypothesis import given, strategies as st  # noqa: E402
 
+import test_conformance as conf  # noqa: E402  (same-dir pytest import)
 from repro.core import encode, lzss, match, quant  # noqa: E402
 
 
@@ -27,16 +28,73 @@ def roundtrip(data: np.ndarray, cfg: lzss.LZSSConfig):
     data=st.binary(min_size=0, max_size=2000),
     symbol_size=st.sampled_from([1, 2, 4]),
     window=st.sampled_from([4, 17, 64, 255]),
-    backend=st.sampled_from(["xla", "fused-deflate"]),
+    backend=st.sampled_from(["xla", "fused-deflate", "fused-mono"]),
 )
 def test_roundtrip_property(data, symbol_size, window, backend):
-    """Round-trips through the unfused tail AND the fused deflate-scatter
-    emit path (fused Kernel II+III) — backends_identical_property below
-    additionally pins their containers byte-identical."""
+    """Round-trips through the unfused tail, the fused deflate-scatter emit
+    path AND the single-kernel compressor — backends_identical_property
+    below additionally pins their containers byte-identical."""
     arr = np.frombuffer(data, np.uint8)
     cfg = lzss.LZSSConfig(symbol_size=symbol_size, window=window,
                           chunk_symbols=128, backend=backend)
     roundtrip(arr, cfg)
+
+
+# --------------------------- differential fuzz vs the kernels/ref oracle
+
+
+@st.composite
+def adversarial_case(draw):
+    """(array, symbol_size, window, chunk_symbols): one corpus drawn from
+    tests/test_conformance.corpora() — the SAME builders the deterministic
+    suite enumerates, with size, seed, window and geometry fuzzed here.
+    New shapes added to corpora() are fuzzed automatically."""
+    dtype_label = draw(st.sampled_from(sorted(conf.DTYPES)))
+    dtype, s = conf.DTYPES[dtype_label]
+    window = draw(st.sampled_from(sorted(lzss.WINDOW_LEVELS.values())))
+    chunk_symbols = draw(st.sampled_from([64, 128]))
+    n = draw(st.integers(min_value=1, max_value=600))
+    rng = np.random.default_rng(draw(st.integers(0, 1 << 16)))
+    pool = conf.corpora(dtype, window, n=n, rng=rng)
+    kind = draw(st.sampled_from(sorted(pool)))
+    return pool[kind], s, window, chunk_symbols
+
+
+@given(
+    case=adversarial_case(),
+    backend=st.sampled_from(sorted(lzss.available_backends())),
+    decoder=st.sampled_from(sorted(lzss.available_decoders())),
+)
+def test_differential_fuzz_property(case, backend, decoder):
+    """Every registered compressor x decoder pair (sampled per example; the
+    full deterministic product lives in tests/test_conformance.py) must
+    emit the kernels/ref.py oracle bytes and roundtrip bit-exactly on
+    adversarial corpora over dtype x window level x chunk_symbols."""
+    arr, s, window, chunk_symbols = case
+    cfg = lzss.LZSSConfig(symbol_size=s, window=window,
+                          chunk_symbols=chunk_symbols, backend=backend)
+    oracle = conf.oracle_container(arr, cfg)
+    res = lzss.compress(arr, cfg)
+    raw = np.ascontiguousarray(arr).view(np.uint8).reshape(-1)
+    assert res.total_bytes == oracle.size, (backend, cfg)
+    np.testing.assert_array_equal(res.data, oracle, err_msg=f"{backend} {cfg}")
+    out = lzss.decompress(res.data, decoder=decoder)
+    np.testing.assert_array_equal(out, raw, err_msg=f"{backend}/{decoder}")
+
+
+@given(case=adversarial_case(), frac=st.integers(min_value=0, max_value=1 << 20))
+def test_truncation_always_raises_never_garbage_property(case, frac):
+    """Chopping ANY suffix off a valid container raises ValueError (the
+    header/length validation satellite) — never silent garbage output.
+    ``frac`` scales over the whole container, so cuts land in the header,
+    the A/B tables, the flag section and the payload alike."""
+    arr, s, window, chunk_symbols = case
+    cfg = lzss.LZSSConfig(symbol_size=s, window=window,
+                          chunk_symbols=chunk_symbols)
+    res = lzss.compress(arr, cfg)
+    cut = 1 + frac % max(1, res.total_bytes - 1)  # 1..total-1 bytes cut
+    with pytest.raises(ValueError):
+        lzss.decompress(res.data[: res.total_bytes - cut])
 
 
 @given(st.lists(st.integers(0, 3), min_size=1, max_size=600))

@@ -193,7 +193,7 @@ def test_sharded_cross_product_sweep_8dev():
         for w in (32, 255):
             kw = dict(symbol_size=s, window=w, chunk_symbols=64)
             ref = lzss.compress_many(items, lzss.LZSSConfig(**kw))
-            for backend in ("xla", "fused", "sharded"):
+            for backend in ("xla", "fused", "fused-mono", "sharded"):
                 if backend == "sharded":
                     cfg = lzss.LZSSConfig(
                         **kw, backend="sharded", decoder="sharded", mesh=mesh
@@ -325,6 +325,56 @@ def test_restore_onto_mesh_repoints_decode_mesh(monkeypatch, tmp_path):
     plain = CheckpointManager(str(tmp_path))
     elastic.restore_onto_mesh(plain, None, None, new_mesh)
     assert seen["mesh"] is None
+
+
+def test_restore_onto_mesh_drops_stale_batch_axis(monkeypatch, tmp_path):
+    """Regression: a checkpoint saved with lz_batch_axis='pod' must restore
+    onto a mesh that has no 'pod' axis — the stale axis used to ride along
+    with the re-pointed mesh and blow up in normalize_batch_axes."""
+    from repro.checkpoint.manager import CheckpointManager
+    from repro.launch import steps as steps_lib
+    from repro.runtime import elastic
+
+    monkeypatch.setattr(
+        steps_lib, "abstract_train_state", lambda cfg, tc: {"x": None}
+    )
+    monkeypatch.setattr(
+        steps_lib, "train_state_shardings", lambda cfg, tc, m: None
+    )
+    seen = {}
+
+    def fake_restore_latest(self, template, shardings=None):
+        seen["mesh"], seen["axis"] = self.lz_mesh, self.lz_batch_axis
+        # the restore path builds configs from these fields; a stale axis
+        # must not survive long enough to reach mesh validation
+        lzss.LZSSConfig(
+            backend="sharded",
+            decoder="sharded",
+            mesh=self.lz_mesh,
+            batch_axis=self.lz_batch_axis,
+        )
+        return template, 3
+
+    monkeypatch.setattr(CheckpointManager, "restore_latest", fake_restore_latest)
+    save_mesh = jax.make_mesh((1, 1), ("pod", "data"))
+    restore_mesh = jax.make_mesh((1,), ("data",))
+    mgr = CheckpointManager(
+        str(tmp_path), lz_mesh=save_mesh, lz_batch_axis="pod"
+    )
+    _, step = elastic.restore_onto_mesh(mgr, None, None, restore_mesh)
+    assert step == 3
+    assert seen["mesh"] is restore_mesh
+    assert seen["axis"] is None  # re-derived from the restore-side mesh
+    # ...but an explicit axis the new mesh still has is preserved (a manager
+    # deliberately sharding over only 'data' keeps that choice)
+    seen.clear()
+    restore_mesh2 = jax.make_mesh((1, 1), ("pod", "data"))
+    mgr2 = CheckpointManager(
+        str(tmp_path), lz_mesh=save_mesh, lz_batch_axis="data"
+    )
+    elastic.restore_onto_mesh(mgr2, None, None, restore_mesh2)
+    assert seen["mesh"] is restore_mesh2
+    assert seen["axis"] == "data"
 
 
 # --------------------------------------------- slow subprocess train tests
