@@ -14,7 +14,7 @@ PY ?= python
 
 .PHONY: test test-fast test-multidevice test-property check-bench lint \
 	bench-pipeline bench-decode bench-sharded bench-sharded-smoke \
-	bench-smoke bench
+	bench-decode-smoke bench-smoke bench
 
 test:
 	PYTHONPATH=src $(PY) -m pytest -x -q
@@ -43,23 +43,26 @@ test-multidevice:
 		$(PY) -m pytest -q tests/test_sharding.py -m "not slow"
 
 # Schema-validate the tracked BENCH_*.json perf records (catches a smoke run
-# accidentally written to the repo root before it clobbers the trajectory).
+# accidentally written to the repo root before it clobbers the trajectory)
+# plus the core/autotune.py cache schema (a drift there would silently
+# invalidate every persisted tuning entry).
 check-bench:
 	PYTHONPATH=src $(PY) -m pytest -q tests/test_benchmarks.py -k artifact_schema
 
 # Mirrors the CI lint job (requires ruff: pip install -e .[lint]).  Format
-# enforcement covers the kernel + sharding subsystems and the pipeline
-# module; the rest of src/ converges module by module as PRs touch it.
+# enforcement covers the kernel + sharding subsystems, the pipeline module
+# and the autotuner; the rest of src/ converges module by module as PRs
+# touch it.
 lint:
 	ruff check src tests benchmarks
 	ruff format --check src/repro/kernels src/repro/sharding \
-		src/repro/core/pipeline.py
+		src/repro/core/pipeline.py src/repro/core/autotune.py
 
 bench-pipeline:
 	PYTHONPATH=src:. $(PY) benchmarks/fig9_throughput.py --backend fused-mono
 
 bench-decode:
-	PYTHONPATH=src:. $(PY) benchmarks/fig10_decode.py --decoder fused
+	PYTHONPATH=src:. $(PY) benchmarks/fig10_decode.py --decoders all
 
 # Shard-mapped batch compression vs the single-device dispatch on a forced
 # host mesh (the script sets XLA_FLAGS itself, before importing jax).
@@ -71,17 +74,24 @@ bench-sharded-smoke:
 		--buffers 8 --nbytes 8192 \
 		--out-json /tmp/BENCH_sharded.smoke.json
 
-# Tiny-size smoke of both fig sweeps: exercises the bench scripts end to end
-# (compress + decode + JSON artifacts) in seconds, even in interpret mode.
-# JSONs go to /tmp so the tracked BENCH_*.json perf records aren't clobbered
-# with meaningless smoke-size numbers.
-bench-smoke:
-	PYTHONPATH=src:. $(PY) benchmarks/fig9_throughput.py \
-		--nbytes 16384 --sweep-nbytes 8192 \
-		--out-json /tmp/BENCH_pipeline.smoke.json
+# Tiny-size smoke of the fig10 decode sweep over EVERY registered decoder
+# (the default --decoders all): exercises the generic registry enumeration
+# plus the fused-mono single-launch path end to end in seconds.  JSON to
+# /tmp so the tracked BENCH_decode.json perf record isn't clobbered.
+bench-decode-smoke:
 	PYTHONPATH=src:. $(PY) benchmarks/fig10_decode.py \
 		--nbytes 16384 --sweep-nbytes 8192 \
 		--out-json /tmp/BENCH_decode.smoke.json
+
+# Tiny-size smoke of both fig sweeps: exercises the bench scripts end to end
+# (compress + decode + JSON artifacts) in seconds, even in interpret mode.
+# The decode half is bench-decode-smoke (its own target so the CI step and
+# local runs share one definition).  JSONs go to /tmp so the tracked
+# BENCH_*.json perf records aren't clobbered with meaningless smoke numbers.
+bench-smoke: bench-decode-smoke
+	PYTHONPATH=src:. $(PY) benchmarks/fig9_throughput.py \
+		--nbytes 16384 --sweep-nbytes 8192 \
+		--out-json /tmp/BENCH_pipeline.smoke.json
 
 bench:
 	PYTHONPATH=src:. $(PY) benchmarks/run.py

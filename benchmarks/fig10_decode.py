@@ -1,19 +1,23 @@
-"""Decode-side throughput: decoder backend sweep (xla-parallel baseline vs
-the fused Pallas decoder, plus the paper-faithful xla-scan oracle on demand).
+"""Decode-side throughput: generic sweep over ALL registered decoders.
 
 The paper only parallelizes decompression at chunk granularity (the
 ``xla-scan`` structure); this repo's restore paths (KV block restore,
 checkpoint load, serving cold-block fetch) ride the decoder registry in
-core/pipeline.py, where ``xla-parallel`` is the unfused beyond-paper decoder
-and ``fused`` keeps the whole decode chain (flag scan, the two prefix sums,
-payload gather, pointer-doubling copy resolution) in VMEM per chunk block —
-the decode-side mirror of the Fig. 4(c)->(d) compression comparison.
+core/pipeline.py, where ``xla-parallel`` is the unfused beyond-paper decoder,
+``fused`` keeps the whole decode chain in VMEM per chunk block (sections
+still gathered by XLA), and ``fused-mono`` is the single-launch decoder that
+reads the container blob straight from HBM — the decode-side mirror of the
+Fig. 4(c)->(d) compression comparison.
 
-``--decoder`` sweeps registry keys against the ``xla-parallel`` baseline and
-writes ``BENCH_decode.json``.  On CPU the fused decoder runs the Pallas
-kernel in interpret mode, so its absolute number is NOT meaningful off-TPU;
-the JSON tags the platform (same interpretation rules as BENCH_pipeline.json,
-see EXPERIMENTS.md §Decode)."""
+The sweep enumerates ``lzss.available_decoders()`` generically (plus any
+decoder registered by the embedding application), so a newly registered
+decoder joins ``BENCH_decode.json`` automatically and the schema guard in
+tests/test_benchmarks.py fails if one goes missing.  Every non-baseline
+decoder gets a ``<decoder>_over_xla_parallel`` speedup key (dashes
+underscored).  On CPU the Pallas decoders run in interpret mode, so their
+absolute numbers are NOT meaningful off-TPU; the JSON tags the platform
+(same interpretation rules as BENCH_pipeline.json, see EXPERIMENTS.md
+§Decode)."""
 
 from __future__ import annotations
 
@@ -26,20 +30,30 @@ from benchmarks.common import emit, throughput_gbs, time_fn
 from repro.core import lzss
 from repro.data import datasets
 
+BASELINE = "xla-parallel"
+
+
+def ratio_key(decoder: str) -> str:
+    """JSON key for a decoder's speedup over the baseline."""
+    return f"{decoder.replace('-', '_')}_over_{BASELINE.replace('-', '_')}"
+
 
 def decoder_sweep(
     data: np.ndarray,
-    decoders=("xla-parallel", "fused"),
+    decoders=None,
     sweep_nbytes: int = 1 << 16,
     out_json: str = "BENCH_decode.json",
     dataset: str = "hurr-quant",
 ) -> dict:
     """Time each registered decoder on the same container; write the JSON.
 
+    ``decoders=None`` sweeps every key in ``lzss.available_decoders()``.
     Throughput is measured in *decoded* (original) bytes per second — the
     figure a restore path cares about.  A smaller slice than the headline
     numbers keeps interpret-mode runs tractable off-TPU.
     """
+    if decoders is None:
+        decoders = tuple(lzss.available_decoders())
     slice_ = np.ascontiguousarray(data[:sweep_nbytes])
     res = lzss.compress(slice_, lzss.DEFAULT_CONFIG)
     results = {}
@@ -64,11 +78,13 @@ def decoder_sweep(
         "ratio": res.ratio,
         "decoders": results,
     }
-    if "xla-parallel" in results and "fused" in results:
-        record["fused_over_xla_parallel"] = (
-            results["xla-parallel"]["seconds_per_call"]
-            / max(results["fused"]["seconds_per_call"], 1e-12)
-        )
+    if BASELINE in results:
+        base_t = results[BASELINE]["seconds_per_call"]
+        for key, entry in results.items():
+            if key != BASELINE:
+                record[ratio_key(key)] = base_t / max(
+                    entry["seconds_per_call"], 1e-12
+                )
     with open(out_json, "w") as f:
         json.dump(record, f, indent=2)
     print(f"# wrote {out_json}")
@@ -76,7 +92,7 @@ def decoder_sweep(
 
 
 def run(nbytes: int = 1 << 20, dataset: str = "hurr-quant",
-        decoder: str = "fused", sweep_nbytes: int = 1 << 16,
+        decoders: str = "all", sweep_nbytes: int = 1 << 16,
         out_json: str = "BENCH_decode.json"):
     print("# fig10: name,us_per_call,GB/s")
     data = datasets.load(dataset, nbytes)
@@ -84,19 +100,22 @@ def run(nbytes: int = 1 << 20, dataset: str = "hurr-quant",
     # headline: default-config container, decoded with the XLA baseline
     res = lzss.compress(data, lzss.DEFAULT_CONFIG)
     t = time_fn(
-        lambda: lzss.decompress(res.data, decoder="xla-parallel"),
+        lambda: lzss.decompress(res.data, decoder=BASELINE),
         warmup=1, iters=2,
     )
     emit(f"fig10/{dataset}/gpulz-decode", t,
          f"{throughput_gbs(data.nbytes, t):.4f}")
 
-    # decoder sweep: always include the xla-parallel baseline so the JSON
-    # records both sides of the comparison
-    decoders = (
-        ("xla-parallel",) if lzss.resolve_decoder(decoder) == "xla-parallel"
-        else ("xla-parallel", decoder)
-    )
-    decoder_sweep(data, decoders=decoders, sweep_nbytes=sweep_nbytes,
+    # decoder sweep: every registered decoder by default, so the tracked
+    # JSON always records one entry per registry key (schema-guarded); a
+    # restricted list always keeps the baseline so the speedup keys exist
+    if decoders == "all":
+        keys = None
+    else:
+        keys = tuple(dict.fromkeys(
+            [BASELINE] + [d for d in decoders.split(",") if d]
+        ))
+    decoder_sweep(data, decoders=keys, sweep_nbytes=sweep_nbytes,
                   out_json=out_json, dataset=dataset)
 
 
@@ -106,15 +125,16 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--nbytes", type=int, default=1 << 20)
     ap.add_argument("--dataset", default="hurr-quant")
-    ap.add_argument("--decoder", default="fused",
-                    choices=sorted(lzss.available_decoders()) + ["auto"],
-                    help="decoder to sweep against the xla-parallel baseline")
+    ap.add_argument("--decoders", default="all",
+                    help="comma-separated registry keys to sweep against the "
+                         f"{BASELINE} baseline, or 'all' (default) for every "
+                         "registered decoder")
     ap.add_argument("--sweep-nbytes", type=int, default=1 << 16,
                     help="corpus slice for the decoder sweep (interpret mode "
-                         "makes fused slow off-TPU)")
+                         "makes the Pallas decoders slow off-TPU)")
     ap.add_argument("--out-json", default="BENCH_decode.json",
                     help="sweep artifact path (point smoke runs elsewhere "
                          "so the tracked perf record isn't clobbered)")
     args = ap.parse_args()
-    run(nbytes=args.nbytes, dataset=args.dataset, decoder=args.decoder,
+    run(nbytes=args.nbytes, dataset=args.dataset, decoders=args.decoders,
         sweep_nbytes=args.sweep_nbytes, out_json=args.out_json)

@@ -59,7 +59,11 @@ class CheckpointManager:
     lz_chunk: int = 4096
     lz_backend: str = "auto"   # compressor registry key; "auto" = the
                                # single-kernel fused-mono pipeline on TPU
-    lz_decoder: str = "auto"   # decode registry key; "auto" = fused on TPU
+    lz_decoder: str = "auto"   # decode registry key; "auto" = the single-
+                               # launch fused-mono decoder on TPU (restores
+                               # decode straight from the stored blobs)
+    lz_chunks_per_block: object = None  # kernel block geometry; None =
+                               # the core/autotune.py chooser per device
     lz_mesh: object = None     # shard each per-dtype-class batched dispatch
                                # over this mesh ("sharded" registry pair);
                                # blobs on disk stay byte-identical, so a
@@ -79,7 +83,8 @@ class CheckpointManager:
             decoder = "sharded" if decoder == "auto" else decoder
         return lzss.LZSSConfig(
             symbol_size=symbol_size, window=self.lz_window,
-            chunk_symbols=self.lz_chunk, backend=backend,
+            chunk_symbols=self.lz_chunk,
+            chunks_per_block=self.lz_chunks_per_block, backend=backend,
             decoder=decoder, mesh=self.lz_mesh,
             batch_axis=self.lz_batch_axis,
         )

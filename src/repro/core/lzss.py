@@ -45,6 +45,7 @@ from repro.core.pipeline import (  # noqa: F401
     register_decoder,
     resolve_backend,
     resolve_decoder,
+    tuned_config,
     unpack_symbols,
 )
 
@@ -106,7 +107,9 @@ def decompress(blob, decoder: str = "auto") -> np.ndarray:
     """Decompress a container -> uint8 array of the original bytes.
 
     ``decoder`` selects the decode strategy by registry key
-    (``available_decoders()``; ``"auto"`` = fused Pallas decoder on TPU).
+    (``available_decoders()``; ``"auto"`` = the single-launch ``fused-mono``
+    decoder on TPU, which reads the blob straight from HBM — ONE Pallas
+    launch per decompress, no section gathers).
     """
     blob = np.asarray(blob, np.uint8)
     # raises ValueError (expected vs actual byte counts) on truncated or

@@ -79,22 +79,38 @@ registry (``register_decoder`` / ``get_decoder``) and entries
                     extraction, both read/write prefix sums, payload gather
                     and pointer-doubling copy resolution stay in VMEM per
                     chunk block; symbols are written to HBM exactly once.
+                    The sections still reach it via two XLA
+                    ``deflate.gather_section`` gathers staged through HBM.
+  ``fused-mono``    the decode-side workflow (d): ONE Pallas launch per
+                    decompress (kernels/lz_decode_mono.py).  The container
+                    blob is read straight from HBM (``memory_space=ANY``)
+                    through per-chunk DMA windows at scalar-prefetched
+                    section offsets, so the gathers fuse into the decode
+                    chain and ``deflate.gather_section`` drops out of the
+                    decode path entirely.  Owns the whole container->symbols
+                    path via the optional ``decode_blob`` hook (the decode
+                    mirror of the compressor's ``compress`` hook).
   ``sharded``       decode-side mirror of the sharded compressor: batched
                     decompression shard-mapped over the mesh passed at
                     dispatch, platform decoder per shard.
 
-``LZSSConfig.decoder`` accepts a registry key, ``"auto"`` (fused on TPU,
-xla-parallel elsewhere — resolved at dispatch, like ``default_backend()``)
-or the legacy aliases ``"parallel"``/``"scan"``, which are normalized to
-registry keys at construction.
+``LZSSConfig.decoder`` accepts a registry key, ``"auto"`` (the single-launch
+``fused-mono`` decoder on TPU, xla-parallel elsewhere — resolved at
+dispatch, like ``default_backend()``) or the legacy aliases
+``"parallel"``/``"scan"``, which are normalized to registry keys at
+construction.
 
-On TPU ``fused-mono`` is the default hot path (``REPRO_FUSED_MONO=0`` falls
-back to the split ``fused-deflate`` pipeline, e.g. while auditing the mono
-kernel's Mosaic lowering on new hardware); elsewhere the kernels execute in
-interpret mode, so the default stays ``xla`` (identical bytes, no
-interpreter overhead).  All backends produce byte-identical containers and
-all decoders identical symbols — property- and sweep-tested in
-tests/test_pipeline.py, tests/test_decoders.py, tests/test_conformance.py
+On TPU the single-kernel ``fused-mono`` paths are the default in BOTH
+directions (``REPRO_FUSED_MONO=0`` falls back to the split ``fused-deflate``
+compressor / ``fused`` decoder, e.g. while auditing the mono kernels'
+Mosaic lowering on new hardware); elsewhere the kernels execute in
+interpret mode, so the defaults stay ``xla`` / ``xla-parallel`` (identical
+bytes, no interpreter overhead).  Kernel block geometry
+(``chunks_per_block``, and prospectively ``chunk_symbols`` via
+``tuned_config``) resolves through the ``core/autotune.py`` chooser.  All
+backends produce byte-identical containers and all decoders identical
+symbols — property- and sweep-tested in tests/test_pipeline.py,
+tests/test_decoders.py, tests/test_conformance.py, tests/test_decode_mono.py
 and the golden corpus under tests/golden/.
 """
 
@@ -108,6 +124,7 @@ from typing import Dict, Protocol
 import jax
 import jax.numpy as jnp
 
+from repro.core import autotune
 from repro.core import decode as decode_mod
 from repro.core import deflate, encode, format as fmt, match
 
@@ -129,8 +146,18 @@ def default_backend() -> str:
 
 
 def default_decoder() -> str:
-    """The preferred decoder for the current accelerator."""
-    return "fused" if jax.default_backend() == "tpu" else "xla-parallel"
+    """The preferred decoder for the current accelerator.
+
+    On TPU the single-launch ``fused-mono`` decoder is the hot path;
+    ``REPRO_FUSED_MONO=0`` falls back to the split ``fused`` decoder
+    (gathered sections + per-chunk kernel — identical symbols, two extra
+    HBM-staged gathers), the same audit escape hatch as the compress side.
+    """
+    if jax.default_backend() != "tpu":
+        return "xla-parallel"
+    if os.environ.get("REPRO_FUSED_MONO", "1") == "0":
+        return "fused"
+    return "fused-mono"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -142,6 +169,15 @@ class LZSSConfig:
     and both accept ``"auto"`` (resolved per-platform at dispatch time).
     The legacy decoder aliases ``"parallel"``/``"scan"`` normalize to their
     registry keys here.
+
+    ``chunks_per_block`` pins the Pallas kernels' block geometry (how many
+    chunks ride one grid step's sublane dimension); the default ``None``
+    defers to the ``core/autotune.py`` chooser at each kernel call site
+    (tuned cache on TPU, deterministic static fallback elsewhere).  The
+    (chunk_symbols, chunks_per_block) pair is validated against the VMEM
+    block budget here — ``autotune.validate_block_geometry`` — so an
+    oversized geometry fails at config construction with the offending pair
+    named instead of as an opaque Mosaic allocation error inside Pallas.
 
     ``mesh``/``batch_axis`` configure the shard-mapped multi-device batch
     layer (``sharding/batch.py``): the ``"sharded"`` compressor/decoder pair
@@ -155,6 +191,7 @@ class LZSSConfig:
     symbol_size: int = 2  # S in {1, 2, 4}
     window: int = 128  # W in [1, 255]; levels 1-4 = 32/64/128/255
     chunk_symbols: int = 2048  # C; VMEM-resident chunk
+    chunks_per_block: object = None  # g; None = autotune (core/autotune.py)
     backend: str = "xla"  # registry key, see available_backends()
     decoder: str = "auto"  # registry key, see available_decoders()
     mesh: object = None  # jax.sharding.Mesh for "sharded" entries
@@ -167,6 +204,16 @@ class LZSSConfig:
             raise ValueError(f"window must be in [1, 255]: {self.window}")
         if self.chunk_symbols % 8:
             raise ValueError("chunk_symbols must be a multiple of 8")
+        # VMEM block-fit check: chunks_per_block=None is validated against
+        # the deterministic fallback geometry (the autotuner's candidate
+        # filter enforces the same budget on anything it would pick later).
+        autotune.validate_block_geometry(
+            self.chunk_symbols,
+            self.chunks_per_block
+            if self.chunks_per_block is not None
+            else autotune.DEFAULT_CHUNKS_PER_BLOCK,
+            self.symbol_size,
+        )
         if self.backend != "auto" and self.backend not in _BACKENDS:
             raise ValueError(
                 f"unknown backend {self.backend!r}; "
@@ -335,7 +382,9 @@ class PallasMatchBackend(_XlaBackendBase):
     def _matches(self, symbols, cfg):
         from repro.kernels import ops  # lazy: kernels are optional at import
 
-        return ops.lz_match(symbols, window=cfg.window)
+        return ops.lz_match(
+            symbols, window=cfg.window, chunks_per_block=cfg.chunks_per_block
+        )
 
 
 class FusedBackend:
@@ -354,6 +403,7 @@ class FusedBackend:
             window=cfg.window,
             min_match=cfg.min_match,
             symbol_size=cfg.symbol_size,
+            chunks_per_block=cfg.chunks_per_block,
         )
         use_match = out["emitted"] & (out["lengths"] >= cfg.min_match)
         sizes = _derive_fields(
@@ -389,6 +439,7 @@ class FusedDeflateBackend(FusedBackend):
             symbol_size=s,
             cap=fmt.max_compressed_bytes(nc * c * s, s, c),
             sec_flags=fmt.HEADER_BYTES + 8 * nc,
+            chunks_per_block=cfg.chunks_per_block,
         )
         return _finalize_container(
             out,
@@ -429,6 +480,7 @@ class FusedMonoBackend(FusedBackend):
             symbol_size=s,
             cap=fmt.max_compressed_bytes(nc * c * s, s, c),
             sec_flags=fmt.HEADER_BYTES + 8 * nc,
+            chunks_per_block=cfg.chunks_per_block,
         )
         return _finalize_container(
             out,
@@ -487,6 +539,13 @@ class DecoderBackend(Protocol):
     ``decode`` maps the (nc, C//8) int32 flag bytes, (nc, C*S) int32 payload
     bytes and (nc,) int32 token counts (the arrays ``deflate.gather_section``
     rebuilds from a container) to (nc, C) int32 symbols.
+
+    A decoder that fuses the section gathers into its kernel may instead
+    define ``decode_blob(blob, n_tokens, payload_sizes, *, symbol_size,
+    chunk_symbols, n_chunks)`` -> (nc, C) symbols and own the whole
+    container->symbols path — checked before the gather+``decode`` split by
+    ``decompress_chunks`` (the decode mirror of the compressor's
+    ``compress`` hook).  ``fused-mono`` is the canonical user.
     """
 
     name: str
@@ -531,7 +590,8 @@ def resolve_decoder(name: str) -> str:
     """Normalize a decoder selector to a registered key.
 
     Accepts registry keys, the legacy aliases ``parallel``/``scan`` and
-    ``auto`` (fused Pallas decoder on TPU, xla-parallel elsewhere).
+    ``auto`` (the single-launch ``fused-mono`` decoder on TPU, xla-parallel
+    elsewhere).
     """
     name = _DECODER_ALIASES.get(name, name)
     if name == "auto":
@@ -591,6 +651,50 @@ class FusedDecoder:
         )
 
 
+class FusedMonoDecoder:
+    """Single-launch decoder (kernels/lz_decode_mono.py): the container blob
+    stays HBM-resident (``memory_space=ANY``) and each grid step DMAs its
+    chunks' flag/payload windows straight into VMEM at scalar-prefetched
+    section offsets before running the fused decode chain — the gathers fuse
+    into the kernel, so ``deflate.gather_section`` never runs and decode is
+    exactly ONE Pallas launch.
+
+    Owns the whole container->symbols path via the ``decode_blob`` hook;
+    the section-level ``decode`` (for callers that already gathered the
+    sections, e.g. a custom pipeline tail) delegates to the split fused
+    kernel — identical symbols either way."""
+
+    name = "fused-mono"
+
+    def decode(self, flag_bytes, payload, n_tokens, *, symbol_size):
+        from repro.kernels import ops  # lazy: kernels are optional at import
+
+        return ops.lz_decode(
+            flag_bytes, payload, n_tokens, symbol_size=symbol_size
+        )
+
+    def decode_blob(
+        self,
+        blob,
+        n_tokens,
+        payload_sizes,
+        *,
+        symbol_size,
+        chunk_symbols,
+        n_chunks,
+    ):
+        from repro.kernels import ops  # lazy: kernels are optional at import
+
+        return ops.lz_decode_mono(
+            blob,
+            n_tokens,
+            payload_sizes,
+            symbol_size=symbol_size,
+            chunk_symbols=chunk_symbols,
+            n_chunks=n_chunks,
+        )
+
+
 class ShardedDecoder:
     """Decode-side mirror of ``ShardedCompressor``: the batched entry point
     dispatches through the optional ``decompress_many`` hook, which shards
@@ -633,6 +737,7 @@ class ShardedDecoder:
 register_decoder(XlaParallelDecoder())
 register_decoder(XlaScanDecoder())
 register_decoder(FusedDecoder())
+register_decoder(FusedMonoDecoder())
 register_decoder(ShardedDecoder())
 
 
@@ -772,8 +877,23 @@ def decompress_chunks(
     section gathers are bounds-checked (clipped + masked), so no worst-case
     zero padding is required.  ``decoder`` is a registry key (or ``"auto"`` /
     a legacy alias), dispatched through ``get_decoder``.
+
+    A decoder owning the whole container->symbols path (the single-launch
+    ``fused-mono``) is dispatched through its ``decode_blob`` hook here —
+    the split gather+decode path below never runs for it.
     """
     c, s, nc = chunk_symbols, symbol_size, n_chunks
+    dec = get_decoder(decoder)
+    whole = getattr(dec, "decode_blob", None)
+    if whole is not None:
+        return whole(
+            blob,
+            n_tokens,
+            payload_sizes,
+            symbol_size=s,
+            chunk_symbols=c,
+            n_chunks=nc,
+        )
     blob = blob.astype(jnp.int32)
     flag_sizes = (n_tokens + 7) // 8
     fcsum = jnp.cumsum(flag_sizes)
@@ -787,9 +907,7 @@ def decompress_chunks(
     payload = deflate.gather_section(
         blob, sec_flags + fcsum[-1], payload_sizes, pay_off, c * s
     )
-    return get_decoder(decoder).decode(
-        flag_bytes, payload, n_tokens, symbol_size=s
-    )
+    return dec.decode(flag_bytes, payload, n_tokens, symbol_size=s)
 
 
 # --------------------------------------------------------- batched cores
@@ -874,6 +992,23 @@ def decompress_many_chunks(
             decoder=decoder,
         )
     )(blobs, n_tokens, payload_sizes)
+
+
+def tuned_config(symbol_size: int = 2, window: int = 128, **overrides) -> LZSSConfig:
+    """An ``LZSSConfig`` with autotuned (chunk_symbols, chunks_per_block).
+
+    Consults ``autotune.tuned_chunk_geometry`` — the joint sweep — for the
+    current accelerator; with tuning disabled (CPU default, or
+    ``REPRO_AUTOTUNE=0``) this is exactly ``LZSSConfig(...)`` with the
+    static defaults.  ``chunk_symbols`` changes container bytes, so use
+    this only when *creating* containers, never to reinterpret existing
+    ones (their geometry is in the header).  Explicit ``chunk_symbols`` /
+    ``chunks_per_block`` overrides win over the tuner.
+    """
+    c, g = autotune.tuned_chunk_geometry(symbol_size=symbol_size, window=window)
+    overrides.setdefault("chunk_symbols", c)
+    overrides.setdefault("chunks_per_block", g)
+    return LZSSConfig(symbol_size=symbol_size, window=window, **overrides)
 
 
 DEFAULT_CONFIG = LZSSConfig()  # paper default: C=2048, S=2, W=128

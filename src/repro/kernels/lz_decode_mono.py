@@ -1,0 +1,202 @@
+"""Single-launch GPULZ decoder: section gathers fused into ONE Pallas kernel.
+
+The split decode path (core/pipeline.py:decompress_chunks with the
+``fused`` decoder) still stages the container through XLA before the kernel
+sees it: two ``deflate.gather_section`` gathers materialize the (nc, C//8)
+flag and (nc, C*S) payload blocks in HBM, and only then does
+kernels/lz_decode.py run.  That is the decode-side analogue of the HBM
+round-trip the fused-mono *compressor* (kernels/lz_fused.py) removed — and
+decode is the serving-restore / KV-onlining hot path, where Sitaridi et al.
+(*Massively-Parallel Lossless Data Decompression*, PAPERS.md) show
+end-to-end kernel residency is what moves throughput.
+
+This kernel reads the container blob straight from HBM instead: the blob is
+passed whole with ``memory_space=ANY``, the per-chunk flag/payload byte
+offsets (derived from the A/B tables core/format.py already carries) ride
+scalar prefetch, and each grid step DMAs its block's section windows
+directly into VMEM scratch before running the exact ``_decode_values``
+chain of kernels/lz_decode.py.  ``deflate.gather_section`` drops out of the
+decode path entirely: ONE launch per decompress.
+
+DMA windows are fixed-width (C//8 flag bytes, C*S payload bytes per chunk —
+the aligned per-chunk maxima), so a chunk's window may overrun its compact
+section into the next chunk's bytes; lane masks against the true per-chunk
+sizes zero those bytes, reproducing gather_section's zero-fill exactly.
+The wrapper pads the blob by one full window per section so the last live
+chunk's window stays in bounds and the belt-and-braces offset clamps (the
+lz_fused.py slide-phase idiom) never engage for live chunks.
+
+Geometry (``chunks_per_block``) resolves through core/autotune.py at the
+ops.py call site.  Byte-identity with the split decoders is enforced by
+tests/test_decode_mono.py (S×W sweep vs the oracle + golden corpus) and the
+one-launch property by its pallas-call counter test.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import format as fmt
+from repro.kernels.lz_decode import _ceil_log2, _decode_values
+
+
+def _mono_decode_kernel(
+    fofs_ref,  # scalar prefetch: (npad,) absolute flag-window byte offsets
+    pofs_ref,  # scalar prefetch: (npad,) absolute payload-window byte offsets
+    ntok_ref,  # (g,) per-chunk token counts
+    psz_ref,  # (g,) per-chunk payload byte sizes
+    blob_ref,  # (1, lpad) int32 container bytes, HBM-resident (ANY)
+    out_ref,  # (g, C) decoded symbols
+    fbuf,  # (g, C//8) VMEM flag window
+    pbuf,  # (g, C*S) VMEM payload window
+    sems,
+    *,
+    symbol_size,
+    nc,
+    lpad,
+):
+    i = pl.program_id(0)
+    g, c = out_ref.shape
+    s = symbol_size
+    cb = c // 8
+    bufsz = c * s
+
+    # ---- fused gather: per-chunk section windows DMA'd straight from HBM --
+    for row in range(g):
+        ci = i * g + row
+
+        @pl.when(ci < nc)
+        def _fetch_row(row=row, ci=ci):
+            # live offsets never clamp (the wrapper pads the blob past every
+            # window); the clamp only guards pathological table values
+            fo = jnp.minimum(fofs_ref[ci], lpad - cb)
+            po = jnp.minimum(pofs_ref[ci], lpad - bufsz)
+            fdma = pltpu.make_async_copy(
+                blob_ref.at[:, pl.dslice(fo, cb)],
+                fbuf.at[pl.dslice(row, 1), :],
+                sems.at[0],
+            )
+            pdma = pltpu.make_async_copy(
+                blob_ref.at[:, pl.dslice(po, bufsz)],
+                pbuf.at[pl.dslice(row, 1), :],
+                sems.at[1],
+            )
+            fdma.start()
+            pdma.start()
+            fdma.wait()
+            pdma.wait()
+
+    # Mask each fixed-width window to its chunk's true section size: the
+    # overrun bytes (next chunk's data, or scratch garbage on skipped pad
+    # rows) become the zeros deflate.gather_section would have produced.
+    nt = ntok_ref[...]
+    fsz = (nt + 7) // 8
+    lane_f = lax.broadcasted_iota(jnp.int32, (g, cb), 1)
+    flags = jnp.where(lane_f < fsz[:, None], fbuf[...], 0)
+    lane_p = lax.broadcasted_iota(jnp.int32, (g, bufsz), 1)
+    payload = jnp.where(lane_p < psz_ref[...][:, None], pbuf[...], 0)
+
+    out_ref[...] = _decode_values(flags, payload, nt, symbol_size=s)
+
+
+def _cost(nc, c, s):
+    lg = _ceil_log2(c)
+    flops = nc * c * (8 * lg + s + 12)
+    return pl.CostEstimate(
+        flops=flops,
+        # sections in (via DMA windows) + tables + symbols out
+        bytes_accessed=nc * ((c + 7) // 8 + c * s) * 4 + nc * 8 + nc * c * 4,
+        transcendentals=0,
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "symbol_size",
+        "chunk_symbols",
+        "n_chunks",
+        "chunks_per_block",
+        "interpret",
+    ),
+)
+def lz_decode_mono_pallas(
+    blob,
+    n_tokens,
+    payload_sizes,
+    *,
+    symbol_size,
+    chunk_symbols,
+    n_chunks,
+    chunks_per_block=8,
+    interpret=False,
+):
+    """ONE launch: container byte blob -> (nc, C) int32 symbols.
+
+    ``blob`` is the whole container (any integer dtype, >= the live
+    container bytes; trailing padding is ignored), ``n_tokens`` /
+    ``payload_sizes`` the (nc,) A/B tables ``format.validate_container``
+    returns.  The per-chunk section offsets are reduced to two cumsums here
+    and prefetched as scalars — no gathered section arrays ever exist.
+    """
+    c, s, nc = chunk_symbols, symbol_size, n_chunks
+    if c % 8:
+        raise ValueError(f"chunk size must be a multiple of 8: {c}")
+    g = chunks_per_block
+    cb = c // 8
+    bufsz = c * s
+
+    b = blob.astype(jnp.int32).reshape(1, -1)
+    # pad so every fixed-width chunk window stays in bounds; lane-align
+    lpad = -(-(b.shape[1] + cb + bufsz) // 128) * 128
+    b = jnp.pad(b, ((0, 0), (0, lpad - b.shape[1])))
+
+    nt = n_tokens.astype(jnp.int32)
+    psz = payload_sizes.astype(jnp.int32)
+    fsz = (nt + 7) // 8
+    fcs = jnp.cumsum(fsz)
+    pcs = jnp.cumsum(psz)
+    sec_flags = fmt.HEADER_BYTES + 8 * nc
+    fofs = sec_flags + fcs - fsz  # absolute flag-section starts
+    pofs = sec_flags + fcs[-1] + pcs - psz  # absolute payload starts
+
+    pad = (-nc) % g
+    if pad:
+        z = jnp.zeros((pad,), jnp.int32)
+        nt = jnp.concatenate([nt, z])
+        psz = jnp.concatenate([psz, z])
+        fofs = jnp.concatenate([fofs, z])
+        pofs = jnp.concatenate([pofs, z])
+    npad = nc + pad
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(npad // g,),
+        in_specs=[
+            pl.BlockSpec((g,), lambda i, fo_, po_: (i,)),
+            pl.BlockSpec((g,), lambda i, fo_, po_: (i,)),
+            pl.BlockSpec(memory_space=pltpu.ANY),
+        ],
+        out_specs=pl.BlockSpec((g, c), lambda i, fo_, po_: (i, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g, cb), jnp.int32),
+            pltpu.VMEM((g, bufsz), jnp.int32),
+            pltpu.SemaphoreType.DMA((2,)),
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(
+            _mono_decode_kernel, symbol_size=s, nc=nc, lpad=lpad
+        ),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((npad, c), jnp.int32),
+        cost_estimate=_cost(npad, c, s),
+        interpret=interpret,
+    )(fofs, pofs, nt, psz, b)
+    return out[:nc]

@@ -1,16 +1,23 @@
 """Jitted public wrappers for the Pallas kernels.
 
 On non-TPU backends the kernels run in interpret mode (Python execution of the
-kernel body) so the whole framework — including the `pallas-match`, `fused`
-and `fused-deflate` pipeline backends (core/pipeline.py) — is testable on
-CPU.  On TPU they compile via Mosaic.
+kernel body) so the whole framework — including the `pallas-match`, `fused`,
+`fused-deflate` and `fused-mono` pipeline backends (core/pipeline.py) — is
+testable on CPU.  On TPU they compile via Mosaic.
+
+Every wrapper takes ``chunks_per_block=None`` by default: the block geometry
+then resolves through core/autotune.py (per-architecture tuned cache on TPU,
+the deterministic static fallback elsewhere / under ``REPRO_AUTOTUNE=0``).
+Passing an explicit integer pins the geometry and bypasses the autotuner.
 """
 
 from __future__ import annotations
 
 import jax
 
+from repro.core import autotune
 from repro.kernels import lz_decode as _dec_impl
+from repro.kernels import lz_decode_mono as _dmono_impl
 from repro.kernels import lz_fused as _mono_impl
 from repro.kernels import lz_match as _impl
 from repro.kernels import lz_scatter as _scat_impl
@@ -20,13 +27,33 @@ def _interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
-def lz_match(symbols, *, window, max_len=_impl.MAX_LEN_CAP, chunks_per_block=8):
+def _blocks(chunks_per_block, *, symbol_size, chunk_symbols, direction, window=0):
+    """Resolve a ``chunks_per_block=None`` default through the autotuner."""
+    if chunks_per_block is not None:
+        return chunks_per_block
+    return autotune.block_geometry(
+        symbol_size=symbol_size,
+        chunk_symbols=chunk_symbols,
+        direction=direction,
+        window=window,
+    )
+
+
+def lz_match(
+    symbols, *, window, max_len=_impl.MAX_LEN_CAP, chunks_per_block=None
+):
     """(nc, C) int32 symbols -> (lengths, offsets)."""
     return _impl.lz_match_pallas(
         symbols,
         window=window,
         max_len=max_len,
-        chunks_per_block=chunks_per_block,
+        chunks_per_block=_blocks(
+            chunks_per_block,
+            symbol_size=4,
+            chunk_symbols=symbols.shape[1],
+            direction="compress",
+            window=window,
+        ),
         interpret=_interpret(),
     )
 
@@ -38,7 +65,7 @@ def lz_kernel1(
     min_match,
     symbol_size,
     max_len=_impl.MAX_LEN_CAP,
-    chunks_per_block=8,
+    chunks_per_block=None,
 ):
     """Fused Kernel I (match + select + local prefix sum)."""
     return _impl.lz_kernel1_pallas(
@@ -47,7 +74,13 @@ def lz_kernel1(
         min_match=min_match,
         symbol_size=symbol_size,
         max_len=max_len,
-        chunks_per_block=chunks_per_block,
+        chunks_per_block=_blocks(
+            chunks_per_block,
+            symbol_size=symbol_size,
+            chunk_symbols=symbols.shape[1],
+            direction="compress",
+            window=window,
+        ),
         interpret=_interpret(),
     )
 
@@ -65,7 +98,7 @@ def lz_scatter(
     symbol_size,
     cap,
     sec_flags,
-    chunks_per_block=8,
+    chunks_per_block=None,
 ):
     """Fused Kernel II+III (global offsets + deflate-scatter).
 
@@ -85,7 +118,12 @@ def lz_scatter(
         symbol_size=symbol_size,
         cap=cap,
         sec_flags=sec_flags,
-        chunks_per_block=chunks_per_block,
+        chunks_per_block=_blocks(
+            chunks_per_block,
+            symbol_size=symbol_size,
+            chunk_symbols=symbols.shape[1],
+            direction="compress",
+        ),
         interpret=_interpret(),
     )
 
@@ -99,7 +137,7 @@ def lz_fused_mono(
     cap,
     sec_flags,
     max_len=_impl.MAX_LEN_CAP,
-    chunks_per_block=8,
+    chunks_per_block=None,
 ):
     """Single-kernel compressor (Kernels I+II+III folded, tiled output).
 
@@ -115,18 +153,62 @@ def lz_fused_mono(
         cap=cap,
         sec_flags=sec_flags,
         max_len=max_len,
-        chunks_per_block=chunks_per_block,
+        chunks_per_block=_blocks(
+            chunks_per_block,
+            symbol_size=symbol_size,
+            chunk_symbols=symbols.shape[1],
+            direction="compress",
+            window=window,
+        ),
         interpret=_interpret(),
     )
 
 
-def lz_decode(flag_bytes, payload, n_tokens, *, symbol_size, chunks_per_block=8):
+def lz_decode(
+    flag_bytes, payload, n_tokens, *, symbol_size, chunks_per_block=None
+):
     """Fused decoder (flag scan + payload gather + copy resolution)."""
     return _dec_impl.lz_decode_pallas(
         flag_bytes,
         payload,
         n_tokens,
         symbol_size=symbol_size,
-        chunks_per_block=chunks_per_block,
+        chunks_per_block=_blocks(
+            chunks_per_block,
+            symbol_size=symbol_size,
+            chunk_symbols=flag_bytes.shape[1] * 8,
+            direction="decompress",
+        ),
+        interpret=_interpret(),
+    )
+
+
+def lz_decode_mono(
+    blob,
+    n_tokens,
+    payload_sizes,
+    *,
+    symbol_size,
+    chunk_symbols,
+    n_chunks,
+    chunks_per_block=None,
+):
+    """Single-launch decoder: whole container blob -> (nc, C) symbols.
+
+    The flag/payload section gathers are fused into the decode kernel via
+    scalar-prefetched per-chunk offsets — no ``deflate.gather_section``."""
+    return _dmono_impl.lz_decode_mono_pallas(
+        blob,
+        n_tokens,
+        payload_sizes,
+        symbol_size=symbol_size,
+        chunk_symbols=chunk_symbols,
+        n_chunks=n_chunks,
+        chunks_per_block=_blocks(
+            chunks_per_block,
+            symbol_size=symbol_size,
+            chunk_symbols=chunk_symbols,
+            direction="decompress",
+        ),
         interpret=_interpret(),
     )

@@ -41,8 +41,8 @@ class ServingEngine:
         self.evict_every = evict_every
         # kv_backend / kv_decoder: compressor/decoder registry keys for the
         # cold-block eviction and restore dispatches ("auto" = the
-        # single-kernel fused-mono compressor / fused Pallas decoder on
-        # TPU).
+        # single-kernel fused-mono pair on TPU: one Pallas launch per
+        # direction, restores read the stored blobs straight from HBM).
         # kv_mesh shards each cold-block round's batch dim over a device
         # mesh — KVBlockStore maps "auto" onto the "sharded" registry pair
         # when a mesh is given (see sharding/batch.py).

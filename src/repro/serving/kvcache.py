@@ -46,8 +46,9 @@ class KVBlockStore:
 
     ``backend`` overrides the eviction-path compressor strategy and
     ``decoder`` the restore-path decode strategy (registry keys; default
-    ``"auto"`` = the fused-mono single-kernel pipeline / fused Pallas decoder on
-    TPU) — batched evictions and restores dispatch through
+    ``"auto"`` = the single-kernel ``fused-mono`` pair on TPU — restores,
+    the KV-onlining hot path, decode in ONE Pallas launch straight from the
+    stored blobs) — batched evictions and restores dispatch through
     ``config.backend`` / ``config.decoder``.
 
     ``mesh``/``batch_axis`` shard each eviction/restore round's batch

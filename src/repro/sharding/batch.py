@@ -17,9 +17,12 @@ the decompression-side version of the same argument).
     axes from ``sharding/rules.py`` — ``("pod", "data")`` when a pod axis
     exists, else ``("data",)``);
   * every shard runs the *existing* registered backend/decoder — the
-    auto-resolved platform default (``fused-mono``/``fused`` on TPU,
-    ``xla``/``xla-parallel`` elsewhere) — so per-buffer blobs are
-    byte-identical to the single-device dispatch by construction;
+    auto-resolved platform default (the single-kernel ``fused-mono`` pair
+    in both directions on TPU, ``xla``/``xla-parallel`` elsewhere; the
+    decode side dispatches through the ``decode_blob`` hook, so each shard's
+    decompress is ONE Pallas launch reading its blobs straight from HBM) —
+    so per-buffer blobs/symbols are byte-identical to the single-device
+    dispatch by construction;
   * the ragged per-buffer blobs gather back as the same ``(B, cap)`` buffer +
     ``(B,)`` totals contract the unsharded batched cores return.
 

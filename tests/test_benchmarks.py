@@ -52,14 +52,16 @@ def test_fig9_backend_sweep_smoke(tmp_path):
 def test_fig10_decoder_sweep_smoke(tmp_path):
     out = tmp_path / "BENCH_decode.json"
     rec = fig10.decoder_sweep(
-        _tiny_corpus(), decoders=("xla-parallel", "fused"),
+        _tiny_corpus(), decoders=("xla-parallel", "fused", "fused-mono"),
         sweep_nbytes=2048, out_json=str(out), dataset="smoke",
     )
     assert out.exists()
     disk = json.loads(out.read_text())
     assert disk["benchmark"] == rec["benchmark"] == "fig10_decoder_sweep"
-    assert {"xla-parallel", "fused"} <= set(disk["decoders"])
+    assert {"xla-parallel", "fused", "fused-mono"} <= set(disk["decoders"])
+    # generic speedup keys: one per non-baseline decoder in the sweep
     assert "fused_over_xla_parallel" in disk
+    assert "fused_mono_over_xla_parallel" in disk
     for entry in disk["decoders"].values():
         assert entry["gb_per_s"] > 0
 
@@ -99,12 +101,63 @@ def test_bench_pipeline_artifact_schema():
 
 
 def test_bench_decode_artifact_schema():
+    from repro.core import lzss
+
     rec = _tracked("BENCH_decode.json")
     assert rec["benchmark"] == "fig10_decoder_sweep"
     assert isinstance(rec["platform"], str)
     assert isinstance(rec["interpret_mode"], bool)
     assert rec["ratio"] > 1  # the sweep corpus actually compresses
-    assert {"xla-parallel", "fused"} <= set(rec["decoders"])
+    # one entry per registered decoder: a decoder added to the registry but
+    # missing from the tracked sweep means BENCH_decode.json went stale
+    # (>= not ==: test-registered custom decoders may come and go)
+    assert set(rec["decoders"]) >= set(lzss.available_decoders()), (
+        "BENCH_decode.json is missing registered decoders; regenerate via "
+        "benchmarks/fig10_decode.py (default --decoders all)"
+    )
     for name, entry in rec["decoders"].items():
         _check_timing_entry(f"decoders[{name}]", entry)
+    for name in rec["decoders"]:
+        if name != fig10.BASELINE:
+            assert rec[fig10.ratio_key(name)] > 0, name
     assert rec["fused_over_xla_parallel"] > 0
+    assert rec["fused_mono_over_xla_parallel"] > 0
+
+
+def test_autotune_cache_artifact_schema(tmp_path):
+    """The autotune cache validator rides check-bench with the other
+    artifact guards: a schema drift that would silently invalidate every
+    persisted tuning entry (or crash loads) fails here first."""
+    from repro.core import autotune
+
+    # a cache produced by the real writer must validate
+    entry = {
+        "chunk_symbols": 2048,
+        "chunks_per_block": 8,
+        "seconds_per_call": 1e-3,
+        "device_kind": "cpu",
+        "direction": "decompress",
+        "swept": 3,
+    }
+    good = {"version": autotune.CACHE_VERSION, "entries": {"k": entry}}
+    autotune.validate_cache(good)
+    # and the validator actually rejects, not rubber-stamps
+    for bad in (
+        [],
+        {"version": 999, "entries": {}},
+        {"version": autotune.CACHE_VERSION, "entries": []},
+        {
+            "version": autotune.CACHE_VERSION,
+            "entries": {"k": dict(entry, chunks_per_block=0)},
+        },
+        {
+            "version": autotune.CACHE_VERSION,
+            "entries": {"k": dict(entry, seconds_per_call=-1)},
+        },
+    ):
+        with pytest.raises(ValueError):
+            autotune.validate_cache(bad)
+    # a corrupted on-disk file is recovered from, never trusted or fatal
+    p = tmp_path / "autotune.json"
+    p.write_text("{broken json")
+    assert autotune._load_cache(str(p))["entries"] == {}

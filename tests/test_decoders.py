@@ -23,7 +23,7 @@ def _corpus(seed, n=1200):
 
 
 def test_registry_lists_all_decoders():
-    assert {"xla-parallel", "xla-scan", "fused"} <= set(
+    assert {"xla-parallel", "xla-scan", "fused", "fused-mono"} <= set(
         lzss.available_decoders()
     )
 
@@ -43,12 +43,17 @@ def test_legacy_decoder_aliases_normalize():
     assert lzss.LZSSConfig().decoder == "auto"  # resolved at dispatch
 
 
-def test_auto_resolves_to_fused_on_tpu(monkeypatch):
+def test_auto_resolves_to_fused_mono_on_tpu(monkeypatch):
     import jax
 
     monkeypatch.setattr(jax, "default_backend", lambda: "tpu")
-    assert pipeline.default_decoder() == "fused"
+    assert pipeline.default_decoder() == "fused-mono"
+    assert pipeline.resolve_decoder("auto") == "fused-mono"
+    # REPRO_FUSED_MONO=0 audits the mono kernels out of BOTH directions:
+    # the decode side falls back to the split fused decoder
+    monkeypatch.setenv("REPRO_FUSED_MONO", "0")
     assert pipeline.resolve_decoder("auto") == "fused"
+    monkeypatch.delenv("REPRO_FUSED_MONO")
     monkeypatch.setattr(jax, "default_backend", lambda: "cpu")
     assert pipeline.resolve_decoder("auto") == "xla-parallel"
 
