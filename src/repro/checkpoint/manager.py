@@ -62,8 +62,9 @@ class CheckpointManager:
     lz_decoder: str = "auto"   # decode registry key; "auto" = the single-
                                # launch fused-mono decoder on TPU (restores
                                # decode straight from the stored blobs)
-    lz_chunks_per_block: object = None  # kernel block geometry; None =
-                               # the core/autotune.py chooser per device
+    lz_chunks_per_block: object = None  # kernel block geometry for BOTH
+                               # save and restore kernels; None = the
+                               # core/autotune.py chooser per device
     lz_mesh: object = None     # shard each per-dtype-class batched dispatch
                                # over this mesh ("sharded" registry pair);
                                # blobs on disk stay byte-identical, so a
@@ -193,6 +194,8 @@ class CheckpointManager:
                 [blobs[n] for n in group], decoder=self.lz_decoder,
                 mesh=self.lz_mesh if sharded else None,
                 batch_axis=self.lz_batch_axis if sharded else None,
+                # the pin governs restore kernels too, not just save
+                chunks_per_block=self.lz_chunks_per_block,
             )
             decompressed.update(
                 {n: r.tobytes() for n, r in zip(group, raws)}

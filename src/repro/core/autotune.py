@@ -36,6 +36,17 @@ geometry C=2048/g=8 — what tests and reproducibility-pinned runs want);
 unset, tuning runs only on real TPU — interpret-mode timings on CPU are
 meaningless, so CI and CPU containers stay on the fallback automatically.
 
+The timed sweep additionally only ever runs *outside* a jax trace: inside
+``jit``/``vmap`` tracing, ``block_until_ready`` no-ops on tracers and
+``time.perf_counter`` would measure tracing overhead, not kernel runtime —
+a winner picked there is noise, and persisting it would poison the cache
+for every future run.  ``best_geometry`` therefore serves memo/cache hits
+(re-validated against the VMEM budget) or the deterministic fallback when
+called under a trace, and the non-jitted entry points
+(``lzss.compress``/``decompress`` and their batched forms) resolve geometry
+eagerly — ``pipeline.resolve_chunk_geometry`` — before crossing the jit
+boundary, so real sweeps happen eagerly on real devices.
+
 ``validate_block_geometry`` is the shared geometry validator: it rejects a
 ``(chunk_symbols, chunks_per_block)`` pair whose VMEM block footprint
 cannot fit, naming the offending pair — ``LZSSConfig.__post_init__`` calls
@@ -121,6 +132,14 @@ def enabled() -> bool:
     if flag is not None:
         return flag != "0"
     return jax.default_backend() == "tpu"  # interpret timings are meaningless
+
+
+def trace_state_clean() -> bool:
+    """True when no jax trace is being staged (sweeps are only valid then)."""
+    try:
+        return bool(jax.core.trace_state_clean())
+    except AttributeError:  # jax moved/renamed it: fail safe, never sweep
+        return False
 
 
 def cache_path() -> str:
@@ -251,6 +270,29 @@ def validate_cache(obj) -> None:
             )
 
 
+def _entry_geometry(cache: dict, key: TuneKey) -> Optional[Tuple[int, int]]:
+    """Validated geometry from a persisted cache entry, or ``None``.
+
+    ``validate_cache`` only proves the schema ("positive ints"); an entry
+    can still be unusable at *this* call site — the cache file is shareable
+    (``REPRO_AUTOTUNE_CACHE``), hand-editable, and survives changes to
+    ``VMEM_LIMIT_BYTES`` / ``block_vmem_bytes``.  Re-check on every hit
+    that the pair still fits the VMEM budget and that a fixed-C key only
+    adopts an entry tuned for that same C; a failing entry is ignored (and
+    overwritten by the next eager sweep) instead of flowing into Pallas as
+    the opaque Mosaic allocation error the validator exists to prevent.
+    """
+    entry = cache["entries"].get(key.cache_key())
+    if entry is None:
+        return None
+    c, g = int(entry["chunk_symbols"]), int(entry["chunks_per_block"])
+    if key.chunk_symbols is not None and c != key.chunk_symbols:
+        return None
+    if not _fits(c, g, key.symbol_size):
+        return None
+    return c, g
+
+
 def _load_cache(path: str) -> dict:
     try:
         with open(path) as f:
@@ -379,10 +421,20 @@ def best_geometry(
     """(chunk_symbols, chunks_per_block) for one key.
 
     Resolution order: deterministic fallback when tuning is disabled;
-    per-process memo; the persisted JSON cache; finally a timed sweep over
-    ``candidates(key)`` whose winner is written back to the cache.  The
-    result is memoized, so a jitted pipeline sees one stable geometry per
-    key for the process lifetime.
+    per-process memo; the persisted JSON cache (entries re-validated
+    against the VMEM budget on every hit — see ``_entry_geometry``);
+    finally a timed sweep over ``candidates(key)`` whose winner is written
+    back to the cache.  The result is memoized, so a jitted pipeline sees
+    one stable geometry per key for the process lifetime.
+
+    The sweep never runs while a jax trace is being staged: the kernel
+    calls in ``measure`` would be staged into the surrounding trace
+    (``block_until_ready`` no-ops on tracers) and the timings would be
+    tracing overhead, not kernel runtime.  Under a trace an untuned key
+    gets the deterministic fallback — unmemoized and unpersisted, so a
+    later eager call can still tune it.  The non-jitted entry points
+    resolve geometry eagerly (``pipeline.resolve_chunk_geometry``) exactly
+    so the hot paths never hit this case.
     """
     if not enabled():
         return fallback(key)
@@ -391,11 +443,12 @@ def best_geometry(
         return _MEMO[ck]
     path = cache_path()
     cache = _load_cache(path)
-    entry = cache["entries"].get(ck)
-    if entry is not None:
-        geom = (int(entry["chunk_symbols"]), int(entry["chunks_per_block"]))
+    geom = _entry_geometry(cache, key)
+    if geom is not None:
         _MEMO[ck] = geom
         return geom
+    if not trace_state_clean():
+        return fallback(key)  # in-trace timings are noise: never sweep here
     # sweep: time every candidate, keep the fastest, persist
     if measure is None:
         measure = _default_measure(key)

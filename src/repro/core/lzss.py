@@ -44,6 +44,8 @@ from repro.core.pipeline import (  # noqa: F401
     register_backend,
     register_decoder,
     resolve_backend,
+    resolve_chunk_geometry,
+    resolve_decode_geometry,
     resolve_decoder,
     tuned_config,
     unpack_symbols,
@@ -98,18 +100,23 @@ def compress(data, config: LZSSConfig = DEFAULT_CONFIG) -> CompressResult:
     nsym = -(-max(n, 1) // s)
     nc = -(-nsym // c)
     symbols = _pack_padded(raw, nc, config)
+    # tuned geometry must resolve HERE, outside the jit trace — timed
+    # sweeps inside a trace would measure tracing, not kernels
+    config = resolve_chunk_geometry(config)
     buf, total = compress_chunks(symbols, config, jnp.int32(n))
     buf, total = np.asarray(buf), int(total)
     return CompressResult(data=buf[:total], orig_bytes=n, total_bytes=total)
 
 
-def decompress(blob, decoder: str = "auto") -> np.ndarray:
+def decompress(blob, decoder: str = "auto", chunks_per_block=None) -> np.ndarray:
     """Decompress a container -> uint8 array of the original bytes.
 
     ``decoder`` selects the decode strategy by registry key
     (``available_decoders()``; ``"auto"`` = the single-launch ``fused-mono``
     decoder on TPU, which reads the blob straight from HBM — ONE Pallas
-    launch per decompress, no section gathers).
+    launch per decompress, no section gathers).  ``chunks_per_block`` pins
+    the decode kernels' block geometry (format-invisible; ``None`` = the
+    autotuner, resolved eagerly here — outside the jit trace).
     """
     blob = np.asarray(blob, np.uint8)
     # raises ValueError (expected vs actual byte counts) on truncated or
@@ -117,6 +124,9 @@ def decompress(blob, decoder: str = "auto") -> np.ndarray:
     h, n_tokens, payload_sizes = fmt.validate_container(blob)
     full = np.zeros(_dispatch_capacity(blob.size), np.uint8)
     full[: blob.size] = blob
+    # canonicalize before the jit boundary: "auto"/aliases must share the
+    # resolved key's trace cache entry, not mint their own
+    dec = resolve_decoder(decoder)
     symbols = decompress_chunks(
         jnp.asarray(full),
         jnp.asarray(n_tokens),
@@ -124,9 +134,14 @@ def decompress(blob, decoder: str = "auto") -> np.ndarray:
         symbol_size=h.symbol_size,
         chunk_symbols=h.chunk_symbols,
         n_chunks=h.n_chunks,
-        # canonicalize before the jit boundary: "auto"/aliases must share
-        # the resolved key's trace cache entry, not mint their own
-        decoder=resolve_decoder(decoder),
+        decoder=dec,
+        # tuned decode geometry resolves eagerly — never inside the trace
+        chunks_per_block=resolve_decode_geometry(
+            chunks_per_block,
+            symbol_size=h.symbol_size,
+            chunk_symbols=h.chunk_symbols,
+            decoder=dec,
+        ),
     )
     out = np.asarray(unpack_symbols(symbols.reshape(-1), h.symbol_size))
     return out[: h.orig_bytes]
@@ -189,6 +204,8 @@ def compress_many(
     nsym_max = -(-max(1, int(sizes.max())) // s)
     nc = -(-nsym_max // c)
     symbols = jnp.stack([_pack_padded(r, nc, config) for r in raws])
+    # tuned geometry must resolve HERE, outside the jit trace (see compress)
+    config = resolve_chunk_geometry(config)
     data, totals = compress_many_chunks(
         symbols, config, jnp.asarray(sizes, jnp.int32)
     )
@@ -201,7 +218,8 @@ def compress_many(
 
 
 def decompress_many(
-    batch, decoder: str = "auto", mesh=None, batch_axis=None
+    batch, decoder: str = "auto", mesh=None, batch_axis=None,
+    chunks_per_block=None,
 ) -> list:
     """Decompress a batch of containers in ONE jitted dispatch.
 
@@ -211,7 +229,9 @@ def decompress_many(
     strategy by registry key.  ``mesh``/``batch_axis`` shard the B dimension
     of the dispatch over a device mesh via the ``"sharded"`` decoder
     (``sharding/batch.py``); symbols are identical to the single-device
-    dispatch.  Returns a list of uint8 arrays.
+    dispatch.  ``chunks_per_block`` pins the decode kernels' block geometry
+    (format-invisible; ``None`` = the autotuner, resolved eagerly here).
+    Returns a list of uint8 arrays.
     """
     if mesh is None:
         if batch_axis is not None:
@@ -259,6 +279,7 @@ def decompress_many(
     stacked = np.zeros((len(blobs), width), np.uint8)
     for i, b in enumerate(blobs):
         stacked[i, : b.size] = b
+    dec = resolve_decoder(decoder)  # one trace cache entry per key
     symbols = decompress_many_chunks(
         jnp.asarray(stacked),
         jnp.asarray(np.stack([t[0] for t in tables])),
@@ -266,7 +287,13 @@ def decompress_many(
         symbol_size=h0.symbol_size,
         chunk_symbols=h0.chunk_symbols,
         n_chunks=h0.n_chunks,
-        decoder=resolve_decoder(decoder),  # one trace cache entry per key
+        decoder=dec,
+        chunks_per_block=resolve_decode_geometry(
+            chunks_per_block,  # eager: sweeps never run inside the trace
+            symbol_size=h0.symbol_size,
+            chunk_symbols=h0.chunk_symbols,
+            decoder=dec,
+        ),
         mesh=mesh,
         batch_axis=(
             tuple(batch_axis)

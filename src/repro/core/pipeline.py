@@ -118,6 +118,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import inspect
 import os
 from typing import Dict, Protocol
 
@@ -160,6 +161,55 @@ def default_decoder() -> str:
     return "fused-mono"
 
 
+def resolve_chunk_geometry(cfg: "LZSSConfig") -> "LZSSConfig":
+    """Pin ``chunks_per_block`` eagerly, *before* any jit trace.
+
+    The autotuner's timed sweep is only meaningful outside a trace
+    (``autotune.best_geometry`` refuses to sweep under one — in-trace
+    timings measure tracing, not kernels).  The host wrappers
+    (``lzss.compress`` / ``compress_many``) call this right before the
+    jitted cores: with tuning enabled and no user pin, the tuned g is
+    resolved here — eagerly, kernels actually executing — and baked into
+    the config as a static pin, so no call site inside the trace ever
+    needs the tuner.  With tuning disabled (or an explicit pin) the config
+    passes through unchanged: the in-trace fallback is deterministic.
+    """
+    if cfg.chunks_per_block is not None or not autotune.enabled():
+        return cfg
+    g = autotune.block_geometry(
+        symbol_size=cfg.symbol_size,
+        chunk_symbols=cfg.chunk_symbols,
+        direction="compress",
+        window=cfg.window,
+    )
+    return dataclasses.replace(cfg, chunks_per_block=g)
+
+
+def resolve_decode_geometry(
+    chunks_per_block, *, symbol_size: int, chunk_symbols: int, decoder="auto"
+):
+    """Decode-side mirror of ``resolve_chunk_geometry``.
+
+    Returns the ``chunks_per_block`` value to pass (statically) into
+    ``decompress_chunks`` / ``decompress_many_chunks``: the caller's pin if
+    given, the eagerly tuned g when tuning is enabled, else ``None`` (the
+    in-trace deterministic fallback).  Called by ``lzss.decompress`` /
+    ``decompress_many`` with the container header's geometry, before the
+    jit boundary.  Decoders that never tile a kernel (the pure-XLA entries
+    mark themselves ``uses_block_geometry = False``) skip the sweep — a
+    tuned g would be dead weight there.
+    """
+    if chunks_per_block is not None or not autotune.enabled():
+        return chunks_per_block
+    if not getattr(get_decoder(decoder), "uses_block_geometry", True):
+        return None  # geometry never reaches a kernel: nothing to tune
+    return autotune.block_geometry(
+        symbol_size=symbol_size,
+        chunk_symbols=chunk_symbols,
+        direction="decompress",
+    )
+
+
 @dataclasses.dataclass(frozen=True)
 class LZSSConfig:
     """Paper parameters: S (symbol bytes), W (window), C (chunk symbols).
@@ -172,8 +222,13 @@ class LZSSConfig:
 
     ``chunks_per_block`` pins the Pallas kernels' block geometry (how many
     chunks ride one grid step's sublane dimension); the default ``None``
-    defers to the ``core/autotune.py`` chooser at each kernel call site
-    (tuned cache on TPU, deterministic static fallback elsewhere).  The
+    defers to the ``core/autotune.py`` chooser (tuned cache on TPU,
+    deterministic static fallback elsewhere).  The config travels with the
+    *compress* direction; decode entry points take the same pin as their
+    own ``chunks_per_block=`` argument (it is format-invisible, so the
+    containers decode identically either way) — consumers holding a config
+    forward it, e.g. ``KVBlockStore.restore_many`` and
+    ``CheckpointManager`` restores.  The
     (chunk_symbols, chunks_per_block) pair is validated against the VMEM
     block budget here — ``autotune.validate_block_geometry`` — so an
     oversized geometry fails at config construction with the offending pair
@@ -539,6 +594,11 @@ class DecoderBackend(Protocol):
     ``decode`` maps the (nc, C//8) int32 flag bytes, (nc, C*S) int32 payload
     bytes and (nc,) int32 token counts (the arrays ``deflate.gather_section``
     rebuilds from a container) to (nc, C) int32 symbols.
+    ``chunks_per_block`` pins the kernel block geometry for decoders that
+    tile (the Pallas entries); ``None`` defers to the autotuner, and the
+    XLA decoders ignore it — it is format-invisible either way.  The kwarg
+    is forwarded only to hooks that accept it (``_geometry_kw``), so
+    decoders registered against the pre-pin signature keep working.
 
     A decoder that fuses the section gathers into its kernel may instead
     define ``decode_blob(blob, n_tokens, payload_sizes, *, symbol_size,
@@ -557,6 +617,7 @@ class DecoderBackend(Protocol):
         n_tokens: jnp.ndarray,
         *,
         symbol_size: int,
+        chunks_per_block=None,
     ) -> jnp.ndarray: ...
 
 
@@ -617,8 +678,11 @@ class XlaParallelDecoder:
     doubling as separate XLA ops — see core/decode.py)."""
 
     name = "xla-parallel"
+    uses_block_geometry = False  # pure XLA: no Pallas tiling to pin/tune
 
-    def decode(self, flag_bytes, payload, n_tokens, *, symbol_size):
+    def decode(
+        self, flag_bytes, payload, n_tokens, *, symbol_size, chunks_per_block=None
+    ):
         return decode_mod.decode_parallel(
             flag_bytes, payload, n_tokens, symbol_size=symbol_size
         )
@@ -628,8 +692,11 @@ class XlaScanDecoder:
     """Paper-faithful sequential token walk (equivalence oracle)."""
 
     name = "xla-scan"
+    uses_block_geometry = False  # pure XLA: no Pallas tiling to pin/tune
 
-    def decode(self, flag_bytes, payload, n_tokens, *, symbol_size):
+    def decode(
+        self, flag_bytes, payload, n_tokens, *, symbol_size, chunks_per_block=None
+    ):
         return decode_mod.decode_scan(
             flag_bytes, payload, n_tokens, symbol_size=symbol_size
         )
@@ -643,11 +710,17 @@ class FusedDecoder:
 
     name = "fused"
 
-    def decode(self, flag_bytes, payload, n_tokens, *, symbol_size):
+    def decode(
+        self, flag_bytes, payload, n_tokens, *, symbol_size, chunks_per_block=None
+    ):
         from repro.kernels import ops  # lazy: kernels are optional at import
 
         return ops.lz_decode(
-            flag_bytes, payload, n_tokens, symbol_size=symbol_size
+            flag_bytes,
+            payload,
+            n_tokens,
+            symbol_size=symbol_size,
+            chunks_per_block=chunks_per_block,
         )
 
 
@@ -666,11 +739,17 @@ class FusedMonoDecoder:
 
     name = "fused-mono"
 
-    def decode(self, flag_bytes, payload, n_tokens, *, symbol_size):
+    def decode(
+        self, flag_bytes, payload, n_tokens, *, symbol_size, chunks_per_block=None
+    ):
         from repro.kernels import ops  # lazy: kernels are optional at import
 
         return ops.lz_decode(
-            flag_bytes, payload, n_tokens, symbol_size=symbol_size
+            flag_bytes,
+            payload,
+            n_tokens,
+            symbol_size=symbol_size,
+            chunks_per_block=chunks_per_block,
         )
 
     def decode_blob(
@@ -682,6 +761,7 @@ class FusedMonoDecoder:
         symbol_size,
         chunk_symbols,
         n_chunks,
+        chunks_per_block=None,
     ):
         from repro.kernels import ops  # lazy: kernels are optional at import
 
@@ -692,6 +772,7 @@ class FusedMonoDecoder:
             symbol_size=symbol_size,
             chunk_symbols=chunk_symbols,
             n_chunks=n_chunks,
+            chunks_per_block=chunks_per_block,
         )
 
 
@@ -704,9 +785,15 @@ class ShardedDecoder:
 
     name = "sharded"
 
-    def decode(self, flag_bytes, payload, n_tokens, *, symbol_size):
+    def decode(
+        self, flag_bytes, payload, n_tokens, *, symbol_size, chunks_per_block=None
+    ):
         return get_decoder("auto").decode(
-            flag_bytes, payload, n_tokens, symbol_size=symbol_size
+            flag_bytes,
+            payload,
+            n_tokens,
+            symbol_size=symbol_size,
+            chunks_per_block=chunks_per_block,
         )
 
     def decompress_many(
@@ -718,6 +805,7 @@ class ShardedDecoder:
         symbol_size,
         chunk_symbols,
         n_chunks,
+        chunks_per_block,
         mesh,
         batch_axis,
     ):
@@ -731,6 +819,7 @@ class ShardedDecoder:
             symbol_size=symbol_size,
             chunk_symbols=chunk_symbols,
             n_chunks=n_chunks,
+            chunks_per_block=chunks_per_block,
         )
 
 
@@ -757,6 +846,22 @@ def unpack_symbols(symbols: jnp.ndarray, symbol_size: int) -> jnp.ndarray:
     """(n_sym,) int32 -> (n_sym * S,) uint8 little-endian."""
     cols = [((symbols >> (8 * b)) & 0xFF) for b in range(symbol_size)]
     return jnp.stack(cols, axis=-1).reshape(-1).astype(jnp.uint8)
+
+
+def _geometry_kw(method, chunks_per_block) -> dict:
+    """kwargs forwarding the decode-side geometry pin to a decoder hook.
+
+    The registry is an extension point: decoders registered before
+    ``chunks_per_block`` reached the decode path don't take the kwarg, and
+    must keep working.  The pin is forwarded only when the hook accepts it
+    (explicitly or via ``**kwargs``); a decoder without the parameter never
+    tiled on it anyway.  Runs at trace time only.
+    """
+    params = inspect.signature(method).parameters
+    accepts = "chunks_per_block" in params or any(
+        p.kind is inspect.Parameter.VAR_KEYWORD for p in params.values()
+    )
+    return {"chunks_per_block": chunks_per_block} if accepts else {}
 
 
 # ------------------------------------------------------- jittable cores
@@ -859,7 +964,14 @@ def _compress_via(backend, symbols, cfg, orig_bytes=None):
 
 
 @functools.partial(
-    jax.jit, static_argnames=("symbol_size", "chunk_symbols", "n_chunks", "decoder")
+    jax.jit,
+    static_argnames=(
+        "symbol_size",
+        "chunk_symbols",
+        "n_chunks",
+        "decoder",
+        "chunks_per_block",
+    ),
 )
 def decompress_chunks(
     blob,
@@ -870,6 +982,7 @@ def decompress_chunks(
     chunk_symbols,
     n_chunks,
     decoder="auto",
+    chunks_per_block=None,
 ):
     """Jittable core: container bytes -> (nc, C) int32 symbols.
 
@@ -877,6 +990,9 @@ def decompress_chunks(
     section gathers are bounds-checked (clipped + masked), so no worst-case
     zero padding is required.  ``decoder`` is a registry key (or ``"auto"`` /
     a legacy alias), dispatched through ``get_decoder``.
+    ``chunks_per_block`` pins the decode kernels' block geometry (``None``
+    = the autotuner); it is format-invisible, so the pin only changes this
+    function's static jit arguments, never the decoded symbols.
 
     A decoder owning the whole container->symbols path (the single-launch
     ``fused-mono``) is dispatched through its ``decode_blob`` hook here —
@@ -893,6 +1009,7 @@ def decompress_chunks(
             symbol_size=s,
             chunk_symbols=c,
             n_chunks=nc,
+            **_geometry_kw(whole, chunks_per_block),
         )
     blob = blob.astype(jnp.int32)
     flag_sizes = (n_tokens + 7) // 8
@@ -907,7 +1024,13 @@ def decompress_chunks(
     payload = deflate.gather_section(
         blob, sec_flags + fcsum[-1], payload_sizes, pay_off, c * s
     )
-    return dec.decode(flag_bytes, payload, n_tokens, symbol_size=s)
+    return dec.decode(
+        flag_bytes,
+        payload,
+        n_tokens,
+        symbol_size=s,
+        **_geometry_kw(dec.decode, chunks_per_block),
+    )
 
 
 # --------------------------------------------------------- batched cores
@@ -945,6 +1068,7 @@ def compress_many_chunks(symbols: jnp.ndarray, cfg: LZSSConfig, orig_bytes=None)
         "chunk_symbols",
         "n_chunks",
         "decoder",
+        "chunks_per_block",
         "mesh",
         "batch_axis",
     ),
@@ -958,6 +1082,7 @@ def decompress_many_chunks(
     chunk_symbols,
     n_chunks,
     decoder="auto",
+    chunks_per_block=None,
     mesh=None,
     batch_axis=None,
 ):
@@ -967,6 +1092,8 @@ def decompress_many_chunks(
     ``decompress_many`` method — ``mesh``/``batch_axis`` are forwarded to it
     (the ``"sharded"`` entry partitions B over the mesh axis; other decoders
     never see them).  The default is the vmapped single-buffer core.
+    ``chunks_per_block`` pins the decode kernels' block geometry, exactly
+    as on ``decompress_chunks``.
     """
     dec = get_decoder(decoder)
     many = getattr(dec, "decompress_many", None)
@@ -980,6 +1107,7 @@ def decompress_many_chunks(
             n_chunks=n_chunks,
             mesh=mesh,
             batch_axis=batch_axis,
+            **_geometry_kw(many, chunks_per_block),
         )
     return jax.vmap(
         lambda b_, t_, p_: decompress_chunks(
@@ -990,6 +1118,7 @@ def decompress_many_chunks(
             chunk_symbols=chunk_symbols,
             n_chunks=n_chunks,
             decoder=decoder,
+            chunks_per_block=chunks_per_block,
         )
     )(blobs, n_tokens, payload_sizes)
 

@@ -30,6 +30,12 @@ Geometry (``chunks_per_block``) resolves through core/autotune.py at the
 ops.py call site.  Byte-identity with the split decoders is enforced by
 tests/test_decode_mono.py (S×W sweep vs the oracle + golden corpus) and the
 one-launch property by its pallas-call counter test.
+
+Real-TPU caveat: the dynamic, byte-granular (unaligned) ``pl.dslice`` DMA
+starts on the ANY-space blob are validated in interpret mode only — no
+other kernel in the repo exercises this Mosaic path.  Until a real-TPU
+smoke has run (ROADMAP), ``REPRO_FUSED_MONO=0`` is the escape hatch that
+drops the TPU ``"auto"`` default back to the split ``fused`` decoder.
 """
 
 from __future__ import annotations

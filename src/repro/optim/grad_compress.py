@@ -124,6 +124,7 @@ def _decompress_slabs(payload, used_lz, slab, cfg):
     syms_lz = pipeline.decompress_many_chunks(
         payload, n_tokens, payload_sizes,
         symbol_size=2, chunk_symbols=c, n_chunks=nc, decoder=cfg.decoder,
+        chunks_per_block=cfg.chunks_per_block,
     ).reshape(n_slabs, -1)
     if cap >= slab * 2:  # lossless raw-u16 fallback
         pairs = p32[:, : slab * 2].reshape(n_slabs, -1, 2)

@@ -148,6 +148,8 @@ class KVBlockStore:
                 [popped[i][2] for i in idxs], decoder=self.config.decoder,
                 mesh=self.config.mesh if sharded else None,
                 batch_axis=self.config.batch_axis if sharded else None,
+                # the config's geometry pin applies to BOTH directions
+                chunks_per_block=self.config.chunks_per_block,
             )
             for i, raw in zip(idxs, raws):
                 out[i] = self._reassemble(popped[i][1], raw)

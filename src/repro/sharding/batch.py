@@ -215,6 +215,7 @@ class ShardedBatchRunner:
         chunk_symbols,
         n_chunks,
         decoder="auto",
+        chunks_per_block=None,
     ):
         """(B, L) blobs + (B, nc) tables -> (B, nc, C) symbols, sharded."""
         dec = pipeline.resolve_decoder("auto" if decoder == "sharded" else decoder)
@@ -223,6 +224,7 @@ class ShardedBatchRunner:
             chunk_symbols=chunk_symbols,
             n_chunks=n_chunks,
             decoder=dec,
+            chunks_per_block=chunks_per_block,
         )
         if self.n_shards == 1:
             return pipeline.decompress_many_chunks(

@@ -295,6 +295,141 @@ def test_autotune_disabled_is_static_geometry(monkeypatch):
         autotune.reset()
 
 
+def test_autotune_never_sweeps_inside_a_trace(tuned_env):
+    """A best_geometry call staged under jit must NOT run the timed sweep:
+    block_until_ready no-ops on tracers, so perf_counter would time tracing
+    overhead and the persisted 'winner' would be noise governing all future
+    runs.  Under a trace an untuned key serves the deterministic fallback,
+    unpersisted; a previously (eagerly) tuned key serves its cache hit."""
+    import jax
+    import jax.numpy as jnp
+
+    key = _key()
+    calls = {"n": 0}
+
+    def measure(c, g):
+        calls["n"] += 1
+        return 1.0 / (c * g)
+
+    got = []
+
+    def traced(x):
+        got.append(autotune.best_geometry(key, measure))
+        return x
+
+    jax.jit(traced)(jnp.zeros(()))
+    assert calls["n"] == 0  # no sweep staged into the trace
+    assert got == [autotune.fallback(key)]
+    assert not tuned_env.exists()  # nothing persisted
+
+    # an eager call still tunes (the in-trace fallback was not memoized) …
+    geom = autotune.best_geometry(key, measure)
+    assert calls["n"] == len(autotune.candidates(key))
+    # … and a subsequent in-trace call now serves that tuned result
+    got.clear()
+    jax.jit(traced)(jnp.zeros((2,)))  # new shape => genuine retrace
+    assert got == [geom] and calls["n"] == len(autotune.candidates(key))
+
+
+def test_autotune_sweep_runs_eagerly_from_host_entry_points(tuned_env, monkeypatch):
+    """lzss.compress/decompress must resolve tuned geometry OUTSIDE their
+    jitted cores: every measure() the sweep runs executes with a clean
+    trace state (kernels really run, timings are real), and the winner is
+    persisted."""
+    import jax
+
+    states = []
+    real = autotune._default_measure
+
+    def spying_measure_factory(key):
+        m = real(key)
+
+        def measure(c, g):
+            states.append(jax.core.trace_state_clean())
+            return m(c, g)
+
+        return measure
+
+    monkeypatch.setattr(autotune, "_default_measure", spying_measure_factory)
+    data = _corpus(40, n=600)
+    cfg = lzss.LZSSConfig(symbol_size=2, window=33, chunk_symbols=64)
+    res = lzss.compress(data, cfg)
+    assert states and all(states)  # compress-side sweep ran, eagerly
+    autotune.validate_cache(json.loads(tuned_env.read_text()))
+    assert json.loads(tuned_env.read_text())["entries"]
+
+    states.clear()
+    out = lzss.decompress(res.data, decoder="fused-mono")
+    assert np.array_equal(out, data.view(np.uint8).reshape(-1))
+    assert states and all(states)  # decode-side sweep ran, eagerly
+
+
+def test_autotune_xla_decoder_skips_decode_sweep(tuned_env, monkeypatch):
+    """A pure-XLA decoder never tiles a kernel: resolving geometry for it
+    must not burn a sweep (uses_block_geometry=False)."""
+    calls = {"n": 0}
+
+    def factory(key):
+        calls["n"] += 1
+        return lambda c, g: 1.0
+
+    monkeypatch.setattr(autotune, "_default_measure", factory)
+    data = _corpus(42, n=500)
+    cfg = lzss.LZSSConfig(symbol_size=1, window=32, chunk_symbols=56)
+    res = lzss.compress(data, cfg)
+    compress_sweeps = calls["n"]
+    out = lzss.decompress(res.data, decoder="xla-parallel")
+    assert np.array_equal(out, data.view(np.uint8).reshape(-1))
+    assert calls["n"] == compress_sweeps  # no decode-direction sweep
+
+
+def test_autotune_cache_hit_revalidates_vmem_fit(tuned_env):
+    """A schema-valid but oversized entry (shared REPRO_AUTOTUNE_CACHE,
+    hand-edited file, or a budget change) must never flow into Pallas: the
+    hit is re-checked against the VMEM budget, dropped, and re-swept."""
+    key = _key()
+    tuned_env.write_text(json.dumps({
+        "version": autotune.CACHE_VERSION,
+        "entries": {key.cache_key(): {
+            "chunk_symbols": 64,
+            "chunks_per_block": 1 << 20,  # passes validate_cache, cannot fit
+            "seconds_per_call": 1e-3,
+        }},
+    }))
+    autotune.validate_cache(json.loads(tuned_env.read_text()))  # schema-valid
+    calls = {"n": 0}
+
+    def measure(c, g):
+        calls["n"] += 1
+        return 1.0 / (c * g)
+
+    geom = autotune.best_geometry(key, measure)
+    assert calls["n"] == len(autotune.candidates(key))  # re-swept, not trusted
+    assert autotune._fits(*geom, key.symbol_size)
+    # the rewritten entry is served on the next fresh-process load
+    autotune.reset()
+    assert autotune.best_geometry(key, measure) == geom
+    assert calls["n"] == len(autotune.candidates(key))
+
+
+def test_autotune_cache_hit_revalidates_fixed_c(tuned_env):
+    """An entry whose chunk_symbols disagrees with a fixed-C key (stale or
+    corrupted cache) must be ignored — the call site's shapes are already
+    committed to its C."""
+    key = _key(chunk_symbols=64)
+    tuned_env.write_text(json.dumps({
+        "version": autotune.CACHE_VERSION,
+        "entries": {key.cache_key(): {
+            "chunk_symbols": 2048,  # not this key's C
+            "chunks_per_block": 8,
+            "seconds_per_call": 1e-3,
+        }},
+    }))
+    c, g = autotune.best_geometry(key, lambda c_, g_: 1.0 / (c_ * g_))
+    assert c == 64
+    assert (c, g) in autotune.candidates(key)
+
+
 def test_autotune_default_gating(monkeypatch):
     """Unset env: tuning only on real TPU (interpret timings mean nothing),
     so CPU CI always runs the deterministic fallback."""
@@ -343,7 +478,8 @@ def test_config_rejects_oversized_block_geometry():
 
 def test_pinned_chunks_per_block_is_format_invisible():
     """Block geometry tiles kernel execution only: pinning g must produce
-    byte-identical containers and symbols across values."""
+    byte-identical containers and symbols across values — in BOTH
+    directions (decode takes the same pin as its own argument)."""
     data = _corpus(36, n=900)
     outs = []
     for g in (1, 4, 8):
@@ -357,8 +493,77 @@ def test_pinned_chunks_per_block_is_format_invisible():
         res = lzss.compress(data, cfg)
         outs.append(res.data)
         assert np.array_equal(
-            lzss.decompress(res.data, decoder="fused-mono"),
+            lzss.decompress(res.data, decoder="fused-mono", chunks_per_block=g),
             data.view(np.uint8).reshape(-1),
         )
     assert np.array_equal(outs[0], outs[1])
     assert np.array_equal(outs[1], outs[2])
+
+
+# ------------------------------------------- decode-side geometry pinning
+
+
+def test_decode_pin_reaches_mono_and_split_kernels(monkeypatch):
+    """A pinned chunks_per_block must reach the decode kernels — pinning
+    only the compress direction would silently hand a reproducibility-
+    pinned restore path to the autotuner."""
+    seen = {}
+    real_mono, real_split = ops.lz_decode_mono, ops.lz_decode
+
+    def spy_mono(*args, **kwargs):
+        seen["mono"] = kwargs.get("chunks_per_block")
+        return real_mono(*args, **kwargs)
+
+    def spy_split(*args, **kwargs):
+        seen["split"] = kwargs.get("chunks_per_block")
+        return real_split(*args, **kwargs)
+
+    monkeypatch.setattr(ops, "lz_decode_mono", spy_mono)
+    monkeypatch.setattr(ops, "lz_decode", spy_split)
+    data = _corpus(41, n=700)
+    # unusual geometry => fresh jit traces, so the spies observe the calls
+    cfg = lzss.LZSSConfig(symbol_size=2, window=35, chunk_symbols=104)
+    res = lzss.compress(data, cfg)
+    raw = data.view(np.uint8).reshape(-1)
+
+    out = lzss.decompress(res.data, decoder="fused-mono", chunks_per_block=2)
+    assert seen.pop("mono") == 2
+    assert np.array_equal(out, raw)
+
+    out = lzss.decompress(res.data, decoder="fused", chunks_per_block=2)
+    assert seen.pop("split") == 2
+    assert np.array_equal(out, raw)
+
+
+def test_decode_pin_threads_through_batched_and_checkpoint_restore(
+    monkeypatch, tmp_path
+):
+    """CheckpointManager.lz_chunks_per_block documents pinning 'the Pallas
+    kernels' block geometry' — that must include the restore direction,
+    through decompress_many and the decode_blob hook."""
+    from repro.checkpoint.manager import CheckpointManager
+
+    seen = []
+    real = ops.lz_decode_mono
+
+    def spy(*args, **kwargs):
+        seen.append(kwargs.get("chunks_per_block"))
+        return real(*args, **kwargs)
+
+    monkeypatch.setattr(ops, "lz_decode_mono", spy)
+    mgr = CheckpointManager(
+        directory=str(tmp_path),
+        lz_window=31,
+        lz_chunk=112,
+        lz_decoder="fused-mono",
+        lz_chunks_per_block=2,
+    )
+    rng = np.random.default_rng(43)
+    state = {"w": np.repeat(rng.integers(0, 8, 400), 4).astype(np.float32)}
+    mgr.save(state, step=1)
+    restored, step = mgr.restore(
+        template={"w": np.zeros(1600, np.float32)}, step=1
+    )
+    assert step == 1
+    assert np.array_equal(restored["w"], state["w"])
+    assert seen and all(g == 2 for g in seen)

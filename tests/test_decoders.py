@@ -218,9 +218,11 @@ def test_kvblockstore_uses_config_decoder(monkeypatch):
     seen = {}
     real = kvcache.lzss.decompress_many
 
-    def spy(batch, decoder="auto", mesh=None, batch_axis=None):
+    def spy(batch, decoder="auto", mesh=None, batch_axis=None,
+            chunks_per_block=None):
         seen["decoder"] = decoder
-        return real(batch, decoder=decoder, mesh=mesh, batch_axis=batch_axis)
+        return real(batch, decoder=decoder, mesh=mesh, batch_axis=batch_axis,
+                    chunks_per_block=chunks_per_block)
 
     monkeypatch.setattr(kvcache.lzss, "decompress_many", spy)
     store = kvcache.KVBlockStore(compress=True, decoder="xla-scan")
