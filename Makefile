@@ -13,8 +13,9 @@
 PY ?= python
 
 .PHONY: test test-fast test-multidevice test-property check-bench lint \
-	bench-pipeline bench-decode bench-sharded bench-sharded-smoke \
-	bench-decode-smoke bench-smoke bench
+	bench-pipeline bench-decode bench-ratio bench-sharded \
+	bench-sharded-smoke bench-decode-smoke bench-ratio-smoke bench-smoke \
+	bench
 
 test:
 	PYTHONPATH=src $(PY) -m pytest -x -q
@@ -56,13 +57,20 @@ check-bench:
 lint:
 	ruff check src tests benchmarks
 	ruff format --check src/repro/kernels src/repro/sharding \
-		src/repro/core/pipeline.py src/repro/core/autotune.py
+		src/repro/core/pipeline.py src/repro/core/autotune.py \
+		src/repro/core/entropy.py
 
 bench-pipeline:
 	PYTHONPATH=src:. $(PY) benchmarks/fig9_throughput.py --backend fused-mono
 
 bench-decode:
 	PYTHONPATH=src:. $(PY) benchmarks/fig10_decode.py --decoders all
+
+# Compression-ratio sweep over EVERY registered compressor backend (the
+# fig8 headline: deflate-full's entropy stage vs the LZSS-only container).
+# Writes the tracked BENCH_ratio.json at the repo root.
+bench-ratio:
+	PYTHONPATH=src:. $(PY) benchmarks/fig8_ratio.py --backends all
 
 # Shard-mapped batch compression vs the single-device dispatch on a forced
 # host mesh (the script sets XLA_FLAGS itself, before importing jax).
@@ -83,12 +91,22 @@ bench-decode-smoke:
 		--nbytes 16384 --sweep-nbytes 8192 \
 		--out-json /tmp/BENCH_decode.smoke.json
 
-# Tiny-size smoke of both fig sweeps: exercises the bench scripts end to end
-# (compress + decode + JSON artifacts) in seconds, even in interpret mode.
-# The decode half is bench-decode-smoke (its own target so the CI step and
-# local runs share one definition).  JSONs go to /tmp so the tracked
-# BENCH_*.json perf records aren't clobbered with meaningless smoke numbers.
-bench-smoke: bench-decode-smoke
+# Tiny-size smoke of the fig8 ratio sweep over EVERY registered backend:
+# exercises the generic registry enumeration + the deflate-full entropy
+# container end to end in seconds.  JSON to /tmp so the tracked
+# BENCH_ratio.json perf record isn't clobbered.
+bench-ratio-smoke:
+	PYTHONPATH=src:. $(PY) benchmarks/fig8_ratio.py \
+		--nbytes 16384 --sweep-nbytes 8192 \
+		--out-json /tmp/BENCH_ratio.smoke.json
+
+# Tiny-size smoke of all three fig sweeps: exercises the bench scripts end
+# to end (compress + decode + ratio + JSON artifacts) in seconds, even in
+# interpret mode.  The decode/ratio parts are their own targets so the CI
+# steps and local runs share one definition.  JSONs go to /tmp so the
+# tracked BENCH_*.json perf records aren't clobbered with meaningless smoke
+# numbers.
+bench-smoke: bench-decode-smoke bench-ratio-smoke
 	PYTHONPATH=src:. $(PY) benchmarks/fig9_throughput.py \
 		--nbytes 16384 --sweep-nbytes 8192 \
 		--out-json /tmp/BENCH_pipeline.smoke.json

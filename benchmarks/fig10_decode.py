@@ -52,15 +52,31 @@ def decoder_sweep(
     figure a restore path cares about.  A smaller slice than the headline
     numbers keeps interpret-mode runs tractable off-TPU.
     """
+    from repro.core import pipeline
+
     if decoders is None:
         decoders = tuple(lzss.available_decoders())
     slice_ = np.ascontiguousarray(data[:sweep_nbytes])
     res = lzss.compress(slice_, lzss.DEFAULT_CONFIG)
+    # each decoder gets a container of its own method: the raw decoders time
+    # the method-0 LZSS container, the entropy decoder a method-1 one (a raw
+    # container is a ValueError for it by design, and vice versa)
+    per_method = {pipeline.container_method("auto"): res}
     results = {}
     for decoder in decoders:
         key = lzss.resolve_decoder(decoder)
+        method = pipeline.container_method(key)
+        if method not in per_method:
+            cfg = lzss.LZSSConfig(
+                symbol_size=lzss.DEFAULT_CONFIG.symbol_size,
+                window=lzss.DEFAULT_CONFIG.window,
+                chunk_symbols=lzss.DEFAULT_CONFIG.chunk_symbols,
+                backend="deflate-full",
+            )
+            per_method[method] = lzss.compress(slice_, cfg)
+        blob = per_method[method].data
         t = time_fn(
-            lambda: lzss.decompress(res.data, decoder=key), warmup=1, iters=2
+            lambda: lzss.decompress(blob, decoder=key), warmup=1, iters=2
         )
         gbs = throughput_gbs(slice_.nbytes, t)
         emit(f"fig10/{dataset}/decoder-{key}", t, f"{gbs:.4f}")

@@ -3,46 +3,25 @@
 Used by the Table-3 use case: original cuSZ = Huffman(quant codes);
 improved cuSZ = Huffman(GPULZ(quant codes)).  Size-exact (codebook +
 bitstream), encoder-only — the use case reports ratios and throughput of the
-GPULZ stage; Huffman decode is out of scope for this paper.
+GPULZ stage; full Huffman decode rides the ``deflate-full`` container
+backend (core/entropy.py), not this estimator.
+
+The code-length assignment itself lives in ``repro.core.entropy`` (promoted
+from this module when the entropy container subsystem landed); this module
+keeps only the size arithmetic on top of it.
 """
 
 from __future__ import annotations
 
-import heapq
-
 import numpy as np
 
+from repro.core.entropy import huffman_code_lengths
 
-def huffman_code_lengths(counts: np.ndarray) -> np.ndarray:
-    """Code length per symbol (0 for absent symbols)."""
-    heap = [(int(c), i) for i, c in enumerate(counts) if c > 0]
-    if len(heap) == 1:
-        lengths = np.zeros(counts.size, np.int64)
-        lengths[heap[0][1]] = 1
-        return lengths
-    heapq.heapify(heap)
-    # internal nodes: (count, id); track merges to recover depths
-    parent = {}
-    next_id = counts.size
-    heap = [(c, i) for c, i in heap]
-    heapq.heapify(heap)
-    while len(heap) > 1:
-        c1, n1 = heapq.heappop(heap)
-        c2, n2 = heapq.heappop(heap)
-        parent[n1] = next_id
-        parent[n2] = next_id
-        heapq.heappush(heap, (c1 + c2, next_id))
-        next_id += 1
-    lengths = np.zeros(counts.size, np.int64)
-    for sym in range(counts.size):
-        if counts[sym] == 0:
-            continue
-        d, node = 0, sym
-        while node in parent:
-            node = parent[node]
-            d += 1
-        lengths[sym] = d
-    return lengths
+__all__ = [
+    "huffman_code_lengths",
+    "huffman_compressed_bytes",
+    "huffman_ratio",
+]
 
 
 def huffman_compressed_bytes(data: np.ndarray) -> int:

@@ -25,7 +25,7 @@ def main() -> None:
     suites = {
         "table1": lambda: table1_ratio.run(nbytes=nbytes),
         "table2": lambda: table2_throughput.run(nbytes=nbytes),
-        "fig8": lambda: fig8_ratio.run(nbytes=nbytes),
+        "fig8": lambda: fig8_ratio.run_paper_table(nbytes=nbytes),
         "fig9": lambda: fig9_throughput.run(nbytes=min(nbytes, 1 << 20)),
         "table3": lambda: table3_usecase.run(nbytes=nbytes),
     }

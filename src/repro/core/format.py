@@ -5,24 +5,48 @@ Layout (little-endian):
   offset  size        field
   ------  ----        -----
   0       4           magic  b"GPLZ"
-  4       1           version (1)
+  4       1           version (2; version-1 blobs remain readable)
   5       1           symbol_size S (1, 2 or 4)
   6       2           window W (u16, <= 255)
   8       4           chunk_symbols C (u32)
   12      4           n_chunks (u32)
   16      8           orig_bytes (u64)
-  24      8           payload_bytes total (u64)
-  32      8           flag_bytes total (u64)
-  40      8           reserved
+  24      8           payload_bytes total (u64, RAW/decoded size)
+  32      8           flag_bytes total (u64, RAW/decoded size)
+  40      1           method: 0 raw LZSS sections, 1 canonical Huffman
+  41      1           sub_log2: gap sub-block size log2 (method 1; else 0)
+  42      6           reserved
   48      4*nc        section A: per-chunk token counts (u32)
   +       4*nc        section B: per-chunk payload sizes (u32)
+
+method 0 (raw, the version-1 layout after the tables):
+
   +       flag_bytes  section C: per-chunk flag arrays, concatenated
   +       payload     section D: per-chunk payloads, concatenated
+
+method 1 (``deflate-full``: sections C/D replaced by canonical-Huffman
+bitstreams with gap-array parallel entry points, core/entropy.py):
+
+  +       128         flag codebook: nibble-packed code lengths (sym 2i in
+                      the low nibble of byte i, sym 2i+1 in the high)
+  +       128         payload codebook, same packing
+  +       8           flag_bits (u64): flag bitstream length in bits
+  +       8           payload_bits (u64)
+  +       4*nsub_f    flag gap array: u32 bit offset of every SUB-th
+                      decoded byte's codeword, SUB = 1 << sub_log2,
+                      nsub_f = ceil(flag_bytes / SUB)
+  +       4*nsub_p    payload gap array, nsub_p = ceil(payload_bytes / SUB)
+  +       ...         flag bitstream, ceil(flag_bits / 8) bytes
+  +       ...         payload bitstream, ceil(payload_bits / 8) bytes
 
 The flag array + two per-chunk size tables mirror the paper's format (flag
 array per §2.2; the two tables are what Kernel II prefix-sums).  Sections C/D
 are compact (deflated); A/B let the decoder rebuild every chunk's offsets with
-two exclusive prefix sums — decompression needs no sequential parse.
+two exclusive prefix sums — decompression needs no sequential parse.  Method-1
+containers keep A/B verbatim and store the RAW section sizes in the header, so
+the same prefix sums still hold after the bitstreams are gap-decoded; bit
+offsets are int32 in-graph, bounding one container's sections at 2**28 bytes
+(the same slab-split regime as ``_le_bytes``).
 """
 
 from __future__ import annotations
@@ -33,8 +57,14 @@ import jax.numpy as jnp
 import numpy as np
 
 MAGIC = (0x47, 0x50, 0x4C, 0x5A)  # "GPLZ"
-VERSION = 1
+VERSION = 2
+SUPPORTED_VERSIONS = (1, 2)
 HEADER_BYTES = 48
+
+METHOD_RAW = 0  # sections C/D are raw LZSS bytes (the version-1 layout)
+METHOD_HUFFMAN = 1  # sections C/D are canonical-Huffman bitstreams
+DEFAULT_SUB_LOG2 = 9  # gap-array sub-block: one entry per 512 decoded bytes
+ENTROPY_META_FIXED = 272  # 2 x 128 B codebooks + 2 x 8 B bit counts
 
 
 @dataclasses.dataclass(frozen=True)
@@ -46,6 +76,11 @@ class Header:
     orig_bytes: int
     payload_bytes: int
     flag_bytes: int
+    version: int = VERSION
+    method: int = METHOD_RAW
+    sub_log2: int = 0
+    flag_bits: int = 0
+    payload_bits: int = 0
 
     @property
     def sec_a(self) -> int:
@@ -63,8 +98,40 @@ class Header:
     def sec_payload(self) -> int:
         return self.sec_flags + self.flag_bytes
 
+    # ------------------------------------ method-1 (entropy) layout
+    @property
+    def sec_meta(self) -> int:
+        """Codebooks + bit counts start where raw section C would."""
+        return self.sec_b + 4 * self.n_chunks
+
+    @property
+    def n_sub_flags(self) -> int:
+        return -(-self.flag_bytes // (1 << self.sub_log2))
+
+    @property
+    def n_sub_payload(self) -> int:
+        return -(-self.payload_bytes // (1 << self.sub_log2))
+
+    @property
+    def sec_gap_flags(self) -> int:
+        return self.sec_meta + ENTROPY_META_FIXED
+
+    @property
+    def sec_gap_payload(self) -> int:
+        return self.sec_gap_flags + 4 * self.n_sub_flags
+
+    @property
+    def sec_stream_flags(self) -> int:
+        return self.sec_gap_payload + 4 * self.n_sub_payload
+
+    @property
+    def sec_stream_payload(self) -> int:
+        return self.sec_stream_flags + (self.flag_bits + 7) // 8
+
     @property
     def total_bytes(self) -> int:
+        if self.method == METHOD_HUFFMAN:
+            return self.sec_stream_payload + (self.payload_bits + 7) // 8
         return self.sec_payload + self.payload_bytes
 
 
@@ -74,6 +141,33 @@ def max_compressed_bytes(n_bytes: int, symbol_size: int, chunk_symbols: int) -> 
     nc = max(1, -(-nsym // chunk_symbols))
     cb = (chunk_symbols + 7) // 8
     return HEADER_BYTES + 8 * nc + nc * cb + nc * chunk_symbols * symbol_size
+
+
+def entropy_meta_bytes(
+    flag_cap: int, payload_cap: int, sub_log2: int = DEFAULT_SUB_LOG2
+) -> int:
+    """Method-1 metadata overhead over the raw layout at section capacity."""
+    sub = 1 << sub_log2
+    return ENTROPY_META_FIXED + 4 * -(-flag_cap // sub) + 4 * -(-payload_cap // sub)
+
+
+def entropy_max_compressed_bytes(
+    n_bytes: int, symbol_size: int, chunk_symbols: int,
+    sub_log2: int = DEFAULT_SUB_LOG2,
+) -> int:
+    """Worst-case method-1 container size.
+
+    The stored-escape in ``entropy.container_code_lengths`` caps each
+    bitstream at its raw section size (8 bits/byte), so the worst case is
+    the raw worst case plus the fixed metadata + gap arrays — incompressible
+    input cannot expand past this bound (tested in tests/test_entropy.py).
+    """
+    nsym = -(-n_bytes // symbol_size)
+    nc = max(1, -(-nsym // chunk_symbols))
+    cb = (chunk_symbols + 7) // 8
+    return max_compressed_bytes(n_bytes, symbol_size, chunk_symbols) + (
+        entropy_meta_bytes(nc * cb, nc * chunk_symbols * symbol_size, sub_log2)
+    )
 
 
 def _le_bytes(value, n):
@@ -97,7 +191,8 @@ def _le_bytes(value, n):
 
 def write_header_and_tables(out, *, symbol_size, window, chunk_symbols,
                             n_chunks, orig_bytes, payload_total, flag_total,
-                            n_tokens, payload_sizes):
+                            n_tokens, payload_sizes,
+                            method=METHOD_RAW, sub_log2=0):
     """Fill header + sections A/B of the flat int32 byte buffer ``out``."""
     static = list(MAGIC) + [VERSION, symbol_size, window & 0xFF, window >> 8]
     static += [
@@ -108,7 +203,9 @@ def write_header_and_tables(out, *, symbol_size, window, chunk_symbols,
         _le_bytes(orig_bytes, 8)
         + _le_bytes(payload_total, 8)
         + _le_bytes(flag_total, 8)
-        + [jnp.zeros((), jnp.int32)] * 8
+        + _le_bytes(int(method), 1)
+        + _le_bytes(int(sub_log2), 1)
+        + [jnp.zeros((), jnp.int32)] * 6
     )
     out = out.at[16:48].set(jnp.stack(dyn).astype(jnp.int32))
     # sections A (token counts) and B (payload sizes), u32 little-endian
@@ -136,13 +233,25 @@ def parse_header(blob: np.ndarray) -> Header:
         )
     if tuple(int(b) for b in blob[:4]) != MAGIC:
         raise ValueError("bad magic: not a GPULZ container")
-    if int(blob[4]) != VERSION:
-        raise ValueError(f"unsupported version {int(blob[4])}")
+    version = int(blob[4])
+    if version not in SUPPORTED_VERSIONS:
+        raise ValueError(
+            f"unsupported version: container declares version {version} but "
+            f"this reader expects one of {SUPPORTED_VERSIONS}"
+        )
 
     def u(lo, n):
         return int.from_bytes(bytes(blob[lo : lo + n]), "little")
 
-    return Header(
+    # version 1 predates the method byte: bytes 40-47 were reserved zeros
+    method = int(blob[40]) if version >= 2 else METHOD_RAW
+    sub_log2 = int(blob[41]) if version >= 2 else 0
+    if method not in (METHOD_RAW, METHOD_HUFFMAN):
+        raise ValueError(
+            f"corrupted container: method {method} not in "
+            f"({METHOD_RAW}, {METHOD_HUFFMAN})"
+        )
+    h = Header(
         symbol_size=int(blob[5]),
         window=u(6, 2),
         chunk_symbols=u(8, 4),
@@ -150,7 +259,23 @@ def parse_header(blob: np.ndarray) -> Header:
         orig_bytes=u(16, 8),
         payload_bytes=u(24, 8),
         flag_bytes=u(32, 8),
+        version=version,
+        method=method,
+        sub_log2=sub_log2,
     )
+    if method == METHOD_HUFFMAN:
+        need = h.sec_meta + ENTROPY_META_FIXED
+        if blob.size < need:
+            raise ValueError(
+                f"truncated container: method-1 metadata ends at byte {need} "
+                f"but only {blob.size} bytes are present"
+            )
+        h = dataclasses.replace(
+            h,
+            flag_bits=u(h.sec_meta + 256, 8),
+            payload_bits=u(h.sec_meta + 264, 8),
+        )
+    return h
 
 
 def parse_tables(blob: np.ndarray, header: Header):
@@ -250,7 +375,67 @@ def validate_container(blob: np.ndarray, header: Header | None = None):
             f"chunk capacity {h.n_chunks * c * s} "
             f"(n_chunks={h.n_chunks}, C={c}, S={s})"
         )
+    if h.method == METHOD_HUFFMAN:
+        _validate_entropy_sections(blob, h)
     return h, n_tokens, payload_sizes
+
+
+def _validate_entropy_sections(blob: np.ndarray, h: Header) -> None:
+    """Method-1 cross-checks: codebooks, bit counts, gap arrays.
+
+    The in-graph gap decoder clips every bitstream access, so a corrupted
+    gap entry or oversubscribed codebook decodes to silent garbage; this
+    raises first.  ``parse_header`` already guaranteed the fixed metadata
+    is present and the caller checked ``total_bytes`` truncation.
+    """
+    if h.sub_log2 != DEFAULT_SUB_LOG2:
+        raise ValueError(
+            f"unsupported container: gap sub-block log2 {h.sub_log2}; this "
+            f"reader supports only {DEFAULT_SUB_LOG2} "
+            f"(sub-block {1 << DEFAULT_SUB_LOG2} bytes)"
+        )
+    for name, bits, raw in (
+        ("flag", h.flag_bits, h.flag_bytes),
+        ("payload", h.payload_bits, h.payload_bytes),
+    ):
+        if bits > 8 * raw:
+            raise ValueError(
+                f"corrupted container: {name} bitstream declares {bits} bits "
+                f"for {raw} decoded bytes — the stored escape caps it at "
+                f"{8 * raw}"
+            )
+    for name, base, raw in (
+        ("flag", h.sec_meta, h.flag_bytes),
+        ("payload", h.sec_meta + 128, h.payload_bytes),
+    ):
+        packed = blob[base : base + 128].astype(np.int64)
+        lens = np.stack([packed & 0xF, packed >> 4], axis=1).reshape(-1)
+        kraft = int(np.where(lens > 0, 1 << (15 - lens), 0).sum())
+        if kraft > 1 << 15:
+            raise ValueError(
+                f"corrupted container: {name} codebook oversubscribes the "
+                f"code space (Kraft sum {kraft} > {1 << 15})"
+            )
+        if raw > 0 and kraft == 0:
+            raise ValueError(
+                f"corrupted container: {name} codebook is empty but the "
+                f"section decodes {raw} bytes"
+            )
+    for name, base, nsub, bits in (
+        ("flag", h.sec_gap_flags, h.n_sub_flags, h.flag_bits),
+        ("payload", h.sec_gap_payload, h.n_sub_payload, h.payload_bits),
+    ):
+        gaps = blob[base : base + 4 * nsub].view(np.uint32).astype(np.int64)
+        if nsub and gaps[0] != 0:
+            raise ValueError(
+                f"corrupted container: {name} gap array starts at bit "
+                f"{int(gaps[0])}, expected 0"
+            )
+        if (np.diff(gaps) < 0).any() or (gaps >= max(bits, 1)).any():
+            raise ValueError(
+                f"corrupted container: {name} gap array is not a monotone "
+                f"sequence of entry points below the {bits}-bit stream"
+            )
 
 
 def parse_tables_jax(blob_i32, n_chunks: int):

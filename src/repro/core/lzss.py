@@ -124,9 +124,25 @@ def decompress(blob, decoder: str = "auto", chunks_per_block=None) -> np.ndarray
     h, n_tokens, payload_sizes = fmt.validate_container(blob)
     full = np.zeros(_dispatch_capacity(blob.size), np.uint8)
     full[: blob.size] = blob
-    # canonicalize before the jit boundary: "auto"/aliases must share the
-    # resolved key's trace cache entry, not mint their own
-    dec = resolve_decoder(decoder)
+    # the container's method byte routes the decode: entropy containers
+    # decode only through the entropy decoder, raw ones through any raw
+    # decoder — a mismatch is a clean ValueError, never garbage symbols
+    if h.method == fmt.METHOD_HUFFMAN:
+        if decoder not in ("auto", "deflate-full"):
+            raise ValueError(
+                f"method-1 (entropy) container: decodes only via "
+                f"decoder='deflate-full' (or 'auto'), got {decoder!r}"
+            )
+        dec = "deflate-full"
+    else:
+        # canonicalize before the jit boundary: "auto"/aliases must share
+        # the resolved key's trace cache entry, not mint their own
+        dec = resolve_decoder(decoder)
+        if dec == "deflate-full":
+            raise ValueError(
+                "decoder='deflate-full' decodes method-1 (entropy) "
+                "containers only; this container is method 0 (raw LZSS)"
+            )
     symbols = decompress_chunks(
         jnp.asarray(full),
         jnp.asarray(n_tokens),
@@ -231,20 +247,14 @@ def decompress_many(
     (``sharding/batch.py``); symbols are identical to the single-device
     dispatch.  ``chunks_per_block`` pins the decode kernels' block geometry
     (format-invisible; ``None`` = the autotuner, resolved eagerly here).
-    Returns a list of uint8 arrays.
+    Entropy (method-1) batches route to the ``"deflate-full"`` decoder
+    automatically — with a mesh, it becomes the per-shard inner decoder of
+    the sharded dispatch.  Returns a list of uint8 arrays.
     """
-    if mesh is None:
-        if batch_axis is not None:
-            # mirror LZSSConfig.__post_init__: a batch_axis without a mesh
-            # would otherwise be silently dropped by the vmap default path
-            raise ValueError("batch_axis requires mesh=...")
-    else:
-        if decoder not in ("auto", "sharded"):
-            raise ValueError(
-                f"mesh= shards the dispatch through the 'sharded' decoder; "
-                f"it cannot be combined with decoder={decoder!r}"
-            )
-        decoder = "sharded"
+    if mesh is None and batch_axis is not None:
+        # mirror LZSSConfig.__post_init__: a batch_axis without a mesh
+        # would otherwise be silently dropped by the vmap default path
+        raise ValueError("batch_axis requires mesh=...")
     if isinstance(batch, BatchedCompressResult):
         # slice rows to their live bytes: the stacked buffer is worst-case
         # wide, and the dispatch width below must track actual sizes
@@ -264,17 +274,44 @@ def decompress_many(
         tables.append((n_tok, pay))
     h0 = headers[0]
     for i, h in enumerate(headers[1:], start=1):
-        if (h.symbol_size, h.chunk_symbols, h.n_chunks) != (
-            h0.symbol_size, h0.chunk_symbols, h0.n_chunks
+        if (h.symbol_size, h.chunk_symbols, h.n_chunks, h.method) != (
+            h0.symbol_size, h0.chunk_symbols, h0.n_chunks, h0.method
         ):
             raise ValueError(
                 f"decompress_many requires a homogeneous batch geometry; "
                 f"buffer 0 has (symbol_size={h0.symbol_size}, "
-                f"chunk_symbols={h0.chunk_symbols}, n_chunks={h0.n_chunks}) "
+                f"chunk_symbols={h0.chunk_symbols}, n_chunks={h0.n_chunks}, "
+                f"method={h0.method}) "
                 f"but buffer {i} has (symbol_size={h.symbol_size}, "
-                f"chunk_symbols={h.chunk_symbols}, n_chunks={h.n_chunks}); "
+                f"chunk_symbols={h.chunk_symbols}, n_chunks={h.n_chunks}, "
+                f"method={h.method}); "
                 f"decompress mismatched containers individually"
             )
+    # method-byte routing, mirroring ``decompress``: entropy batches take
+    # the entropy decoder (per-shard, when a mesh shards the dispatch)
+    entropy_batch = h0.method == fmt.METHOD_HUFFMAN
+    inner_decoder = None
+    if mesh is not None:
+        if decoder not in ("auto", "sharded"):
+            raise ValueError(
+                f"mesh= shards the dispatch through the 'sharded' decoder; "
+                f"it cannot be combined with decoder={decoder!r}"
+            )
+        decoder = "sharded"
+        if entropy_batch:
+            inner_decoder = "deflate-full"
+    elif entropy_batch:
+        if decoder not in ("auto", "deflate-full"):
+            raise ValueError(
+                f"method-1 (entropy) containers: decode only via "
+                f"decoder='deflate-full' (or 'auto'), got {decoder!r}"
+            )
+        decoder = "deflate-full"
+    elif decoder != "sharded" and resolve_decoder(decoder) == "deflate-full":
+        raise ValueError(
+            "decoder='deflate-full' decodes method-1 (entropy) containers "
+            "only; this batch is method 0 (raw LZSS)"
+        )
     width = _dispatch_capacity(max(b.size for b in blobs))
     stacked = np.zeros((len(blobs), width), np.uint8)
     for i, b in enumerate(blobs):
@@ -300,6 +337,7 @@ def decompress_many(
             if isinstance(batch_axis, list)
             else batch_axis  # static jit arg: must be hashable
         ),
+        inner_decoder=inner_decoder,
     )
     s = h0.symbol_size
     flat = np.asarray(symbols).reshape(len(blobs), -1)

@@ -67,6 +67,17 @@ Registered backends:
                     / ``decompress_many`` (mirroring ``emit``): a backend may
                     own the whole batched dispatch, with the vmapped
                     single-buffer core as the default.
+  ``deflate-full``  the entropy-coded container (core/entropy.py): the
+                    platform LZSS pipeline runs first (via the ``compress``
+                    hook, so the fused-mono kernel is still the Kernel-I/II/
+                    III engine on TPU), then both container sections are
+                    canonical-Huffman coded into a method-1 VERSION-2
+                    container with gap-array parallel entry points.  The
+                    only backend whose containers differ from the others —
+                    byte-identity is traded for ratio; decode requires the
+                    ``deflate-full`` decoder (``LZSSConfig`` normalizes
+                    ``decoder="auto"`` to it, and ``lzss.decompress``
+                    dispatches on the container's method byte).
 
 Decompression mirrors the same design: ``DecoderBackend`` is the decode-side
 contract (per-chunk aligned flag/payload sections -> symbols), with its own
@@ -92,7 +103,17 @@ registry (``register_decoder`` / ``get_decoder``) and entries
                     mirror of the compressor's ``compress`` hook).
   ``sharded``       decode-side mirror of the sharded compressor: batched
                     decompression shard-mapped over the mesh passed at
-                    dispatch, platform decoder per shard.
+                    dispatch, platform decoder per shard.  Entropy containers
+                    shard too: ``lzss.decompress_many`` forwards the inner
+                    per-shard decoder (``inner_decoder=``) through the
+                    ``decompress_many`` hook.
+  ``deflate-full``  decoder for method-1 (entropy) containers: gap-array
+                    parallel Huffman bitstream decode (Pallas kernel on TPU,
+                    vectorized lax.scan elsewhere) rebuilds the raw sections,
+                    then hands off to the platform LZSS decode chain.  Raw
+                    containers raise a ValueError under it, and entropy
+                    containers raise under every raw decoder —
+                    ``lzss.decompress`` routes on the method byte.
 
 ``LZSSConfig.decoder`` accepts a registry key, ``"auto"`` (the single-launch
 ``fused-mono`` decoder on TPU, xla-parallel elsewhere — resolved at
@@ -283,6 +304,16 @@ class LZSSConfig:
                 f"registered: {available_decoders()} "
                 f"(also accepted: 'auto', {sorted(_DECODER_ALIASES)})"
             )
+        # the entropy pair is a container *format*, not just an execution
+        # strategy: method-1 containers decode only through their own
+        # decoder, so pin the pairing here instead of failing at dispatch
+        if self.backend == "deflate-full" and self.decoder == "auto":
+            object.__setattr__(self, "decoder", "deflate-full")
+        if self.decoder == "deflate-full" and self.backend != "deflate-full":
+            raise ValueError(
+                "decoder='deflate-full' decodes method-1 (entropy) containers "
+                "only; pair it with backend='deflate-full'"
+            )
         if isinstance(self.batch_axis, list):
             # jit static-arg hashability: axis collections must be tuples
             object.__setattr__(self, "batch_axis", tuple(self.batch_axis))
@@ -290,10 +321,14 @@ class LZSSConfig:
             if self.batch_axis is not None:
                 raise ValueError("batch_axis requires mesh=...")
             return
-        if self.backend != "sharded" and self.decoder != "sharded":
+        if (
+            self.backend not in ("sharded", "deflate-full")
+            and self.decoder != "sharded"
+        ):
             raise ValueError(
                 "mesh=... is only consulted by the 'sharded' compressor/"
-                "decoder; set backend='sharded' and/or decoder='sharded'"
+                "decoder and the batched 'deflate-full' entropy dispatch; "
+                "set backend='sharded'/'deflate-full' and/or decoder='sharded'"
             )
         if self.batch_axis is not None:
             # single source of truth for axis validation (same check the
@@ -576,6 +611,37 @@ class ShardedCompressor:
         return runner.compress_many(symbols, cfg, orig_bytes)
 
 
+class EntropyBackend:
+    """Entropy-coded container (core/entropy.py): platform LZSS + canonical
+    Huffman over both sections, emitted as a method-1 VERSION-2 container
+    with gap-array parallel entry points.  The only backend whose container
+    bytes differ from the raw family (``container_method`` marks it);
+    ``compress_many`` honors ``cfg.mesh`` so batched entropy compression
+    shards exactly like the ``"sharded"`` entry."""
+
+    name = "deflate-full"
+    container_method = fmt.METHOD_HUFFMAN
+
+    def kernel1(self, symbols, cfg):
+        # the LZSS stage is the platform pipeline; entropy is emit-side only
+        return get_backend("auto").kernel1(symbols, cfg)
+
+    def compress(self, symbols, cfg, orig_bytes=None):
+        from repro.core import entropy  # lazy: entropy imports this module
+
+        return entropy.compress_entropy(symbols, cfg, orig_bytes)
+
+    def compress_many(self, symbols, cfg, orig_bytes):
+        if cfg.mesh is not None:
+            from repro.sharding import batch as shbatch  # lazy: avoid cycle
+
+            runner = shbatch.ShardedBatchRunner(cfg.mesh, cfg.batch_axis)
+            return runner.compress_many(symbols, cfg, orig_bytes)
+        return jax.vmap(lambda s_, o_: compress_chunks(s_, cfg, o_))(
+            symbols, orig_bytes
+        )
+
+
 register_backend(XlaBackend())
 register_backend(XlaScanBackend())
 register_backend(PallasMatchBackend())
@@ -583,6 +649,35 @@ register_backend(FusedBackend())
 register_backend(FusedDeflateBackend())
 register_backend(FusedMonoBackend())
 register_backend(ShardedCompressor())
+register_backend(EntropyBackend())
+
+
+def container_method(name: str) -> int:
+    """The container method a registry entry produces/consumes.
+
+    ``fmt.METHOD_RAW`` for the byte-identical LZSS family,
+    ``fmt.METHOD_HUFFMAN`` for the entropy pair — looked up on the
+    registered instance (``container_method`` attribute, default raw), so
+    tests and benchmarks can pair compressors with decoders generically
+    instead of name-matching.  Works for both registries (backend names
+    win on collisions only in the sense that methods agree by design).
+    """
+    entry = _BACKENDS.get(name) or _DECODERS.get(name)
+    if entry is None:
+        # not a direct key: accept the same selectors the registries do
+        # ("auto", legacy decoder aliases) before giving up
+        for resolve, table in (
+            (resolve_backend, _BACKENDS),
+            (resolve_decoder, _DECODERS),
+        ):
+            try:
+                entry = table[resolve(name)]
+                break
+            except ValueError:
+                continue
+        else:
+            raise ValueError(f"unknown backend/decoder {name!r}")
+    return getattr(entry, "container_method", fmt.METHOD_RAW)
 
 
 # ------------------------------------------------------------- decoders
@@ -808,12 +903,61 @@ class ShardedDecoder:
         chunks_per_block,
         mesh,
         batch_axis,
+        inner_decoder=None,
     ):
         from repro.sharding import batch as shbatch  # lazy: avoid cycle
 
         runner = shbatch.ShardedBatchRunner(mesh, batch_axis)
         return runner.decompress_many(
             blobs,
+            n_tokens,
+            payload_sizes,
+            symbol_size=symbol_size,
+            chunk_symbols=chunk_symbols,
+            n_chunks=n_chunks,
+            chunks_per_block=chunks_per_block,
+            decoder="auto" if inner_decoder is None else inner_decoder,
+        )
+
+
+class EntropyDecoder:
+    """Decoder for method-1 (entropy) containers: gap-array parallel Huffman
+    bitstream decode (core/entropy.py) rebuilds the raw flag/payload
+    sections, then the platform LZSS decode chain finishes.  Owns the whole
+    container->symbols path via ``decode_blob``; the section-level
+    ``decode`` (sections already un-entropied by definition) delegates to
+    the platform decoder."""
+
+    name = "deflate-full"
+    container_method = fmt.METHOD_HUFFMAN
+
+    def decode(
+        self, flag_bytes, payload, n_tokens, *, symbol_size, chunks_per_block=None
+    ):
+        dec = get_decoder("auto")
+        return dec.decode(
+            flag_bytes,
+            payload,
+            n_tokens,
+            symbol_size=symbol_size,
+            **_geometry_kw(dec.decode, chunks_per_block),
+        )
+
+    def decode_blob(
+        self,
+        blob,
+        n_tokens,
+        payload_sizes,
+        *,
+        symbol_size,
+        chunk_symbols,
+        n_chunks,
+        chunks_per_block=None,
+    ):
+        from repro.core import entropy  # lazy: entropy imports this module
+
+        return entropy.decode_blob_entropy(
+            blob,
             n_tokens,
             payload_sizes,
             symbol_size=symbol_size,
@@ -828,6 +972,7 @@ register_decoder(XlaScanDecoder())
 register_decoder(FusedDecoder())
 register_decoder(FusedMonoDecoder())
 register_decoder(ShardedDecoder())
+register_decoder(EntropyDecoder())
 
 
 # ------------------------------------------------------- symbol packing
@@ -1071,6 +1216,7 @@ def compress_many_chunks(symbols: jnp.ndarray, cfg: LZSSConfig, orig_bytes=None)
         "chunks_per_block",
         "mesh",
         "batch_axis",
+        "inner_decoder",
     ),
 )
 def decompress_many_chunks(
@@ -1085,6 +1231,7 @@ def decompress_many_chunks(
     chunks_per_block=None,
     mesh=None,
     batch_axis=None,
+    inner_decoder=None,
 ):
     """Batched inverse: (B, L) blobs + (B, nc) tables -> (B, nc, C) symbols.
 
@@ -1093,11 +1240,23 @@ def decompress_many_chunks(
     (the ``"sharded"`` entry partitions B over the mesh axis; other decoders
     never see them).  The default is the vmapped single-buffer core.
     ``chunks_per_block`` pins the decode kernels' block geometry, exactly
-    as on ``decompress_chunks``.
+    as on ``decompress_chunks``.  ``inner_decoder`` names the per-shard
+    decoder a batch-owning hook should run (``None`` = platform default;
+    ``lzss.decompress_many`` sets it to ``"deflate-full"`` when a sharded
+    batch holds entropy containers) — forwarded only to hooks that accept
+    it, so decoders registered against the older hook signature keep
+    working.
     """
     dec = get_decoder(decoder)
     many = getattr(dec, "decompress_many", None)
     if many is not None:
+        inner_kw = {}
+        if inner_decoder is not None:
+            params = inspect.signature(many).parameters
+            if "inner_decoder" in params or any(
+                p.kind is inspect.Parameter.VAR_KEYWORD for p in params.values()
+            ):
+                inner_kw["inner_decoder"] = inner_decoder
         return many(
             blobs,
             n_tokens,
@@ -1108,6 +1267,7 @@ def decompress_many_chunks(
             mesh=mesh,
             batch_axis=batch_axis,
             **_geometry_kw(many, chunks_per_block),
+            **inner_kw,
         )
     return jax.vmap(
         lambda b_, t_, p_: decompress_chunks(

@@ -1,0 +1,252 @@
+"""Pallas kernels for the entropy container stage (core/entropy.py).
+
+Two kernels back the ``deflate-full`` backend/decoder pair:
+
+  * ``byte_histogram_pallas`` — the code-length front end: a sequential-grid
+    reduction over 1024-byte tiles of the section buffer.  Each grid step
+    one-hot-compares its tile against the 256 symbol lanes and accumulates
+    into a revisited (1, 256) output block (constant index map, initialized
+    at step 0) — the Pallas analogue of the XLA 257-slot scatter-add
+    fallback in ``core.entropy.byte_histogram``, identical counts by test.
+
+  * ``huffman_gap_decode_pallas`` — the parallel bitstream decoder: the
+    container blob stays HBM-resident (``memory_space=ANY``, the
+    lz_decode_mono.py idiom) and each grid step DMAs one fixed-width
+    bitstream window per gap-array sub-block into VMEM at scalar-prefetched
+    byte offsets.  Every sub-block lane then walks exactly ``sub``
+    codewords from its entry point: a 24-bit window is gathered at the
+    lane's bit offset, all 15 candidate lengths are range-tested against
+    the canonical ``first``/``count`` tables at once (the prefix property
+    guarantees a unique hit), and the decode table maps the hit to its
+    symbol.  The sequential Huffman constraint lives only *inside* a
+    sub-block — sub-blocks are embarrassingly parallel, which is the gap
+    array's entire point (Sitaridi et al., PAPERS.md).
+
+The decode table rides in one (8, 128) int32 block: rows 0-2 are the
+``first`` / ``count`` / ``base`` per-length tables (16 live lanes), rows
+3-4 the 256-entry symbol ``order`` map split across two lanes' rows.
+
+Real-TPU caveat (same class as lz_decode_mono.py, documented in
+EXPERIMENTS.md): the per-lane ``take_along_axis`` window gathers and the
+dynamic per-codeword column store are validated in interpret mode only;
+``REPRO_ENTROPY_PALLAS=0`` drops the TPU default back to the XLA
+scan/scatter paths in core/entropy.py until a real-TPU smoke has run.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+HIST_TILE = 1024  # bytes per histogram grid step (8 x 128 int32 lanes)
+N_SYMBOLS = 256
+MAX_CODE_LEN = 15
+
+
+def _round_up(n: int, m: int) -> int:
+    return -(-n // m) * m
+
+
+def window_bytes(sub: int) -> int:
+    """Fixed DMA window per sub-block: worst case ``sub`` 15-bit codewords
+    starting at any bit phase, plus the 2-byte lookahead of the last
+    24-bit window read, lane-aligned."""
+    return _round_up((7 + MAX_CODE_LEN * sub) // 8 + 3, 128)
+
+
+# --------------------------------------------------------------- histogram
+
+
+def _hist_kernel(start_ref, len_ref, buf_ref, out_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    tile = buf_ref.shape[1]
+    vals = (buf_ref[...].reshape(tile, 1)) & 0xFF
+    gidx = i * tile + lax.broadcasted_iota(jnp.int32, (tile, 1), 0)
+    lo = start_ref[0]
+    ok = (gidx >= lo) & (gidx < lo + len_ref[0])
+    sym = lax.broadcasted_iota(jnp.int32, (1, N_SYMBOLS), 1)
+    eq = (vals == sym) & ok
+    out_ref[...] += jnp.sum(eq.astype(jnp.int32), axis=0, keepdims=True)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def byte_histogram_pallas(buf, start, length, *, interpret=False):
+    """(n,) int32 byte buffer -> (256,) int32 counts of [start, start+len).
+
+    ``start``/``length`` may be traced; they ride scalar prefetch.  The
+    grid is sequential over 1024-byte tiles, accumulating into one
+    revisited (1, 256) block.
+    """
+    b = jnp.asarray(buf, jnp.int32).reshape(1, -1)
+    npad = _round_up(max(b.shape[1], 1), HIST_TILE)
+    b = jnp.pad(b, ((0, 0), (0, npad - b.shape[1])))
+    sarr = jnp.asarray(start, jnp.int32).reshape(1)
+    larr = jnp.asarray(length, jnp.int32).reshape(1)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(npad // HIST_TILE,),
+        in_specs=[pl.BlockSpec((1, HIST_TILE), lambda i, s_, l_: (0, i))],
+        out_specs=pl.BlockSpec((1, N_SYMBOLS), lambda i, s_, l_: (0, 0)),
+    )
+    out = pl.pallas_call(
+        _hist_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((1, N_SYMBOLS), jnp.int32),
+        cost_estimate=pl.CostEstimate(
+            flops=npad * N_SYMBOLS,
+            bytes_accessed=npad * 4 + N_SYMBOLS * 4,
+            transcendentals=0,
+        ),
+        interpret=interpret,
+    )(sarr, larr, b)
+    return out[0]
+
+
+# ------------------------------------------------------ gap-array decoder
+
+
+def _gap_decode_kernel(
+    wstart_ref,  # scalar prefetch: (npad,) absolute window byte starts
+    rem_ref,  # (g,) entry-point bit remainders within each window
+    tab_ref,  # (8, 128) packed decode table (see module docstring)
+    blob_ref,  # (1, lpad) container bytes, HBM-resident (ANY)
+    out_ref,  # (g, sub) decoded bytes
+    wbuf,  # (g, win) VMEM bitstream windows
+    sems,
+    *,
+    sub,
+    win,
+    nsub,
+):
+    i = pl.program_id(0)
+    g = out_ref.shape[0]
+
+    for row in range(g):
+        li = i * g + row
+
+        @pl.when(li < nsub)
+        def _fetch(row=row, li=li):
+            dma = pltpu.make_async_copy(
+                blob_ref.at[:, pl.dslice(wstart_ref[li], win)],
+                wbuf.at[pl.dslice(row, 1), :],
+                sems.at[0],
+            )
+            dma.start()
+            dma.wait()
+
+    first = tab_ref[0, : MAX_CODE_LEN + 1]
+    count = tab_ref[1, : MAX_CODE_LEN + 1]
+    base = tab_ref[2, : MAX_CODE_LEN + 1]
+    order = tab_ref[3:5, :].reshape(N_SYMBOLS)
+    w = wbuf[...] & 0xFF
+    # iota-built constants: a captured jnp.arange would be a trace-level
+    # constant, which pallas_call rejects
+    ls = 1 + lax.broadcasted_iota(jnp.int32, (1, MAX_CODE_LEN), 1)
+    fc = jnp.take(first, ls)  # (1, 15) first codeword per length
+    cn = jnp.take(count, ls)
+
+    def step(t, off):
+        byte = off >> 3
+        look = lax.broadcasted_iota(jnp.int32, (1, 3), 1)
+        idx = jnp.clip(byte[:, None] + look, 0, win - 1)
+        b3 = jnp.take_along_axis(w, idx, axis=1)
+        w24 = (b3[:, 0] << 16) | (b3[:, 1] << 8) | b3[:, 2]
+        win15 = (w24 >> (9 - (off & 7))) & ((1 << MAX_CODE_LEN) - 1)
+        cand = win15[:, None] >> (MAX_CODE_LEN - ls)
+        ok = (cand >= fc) & (cand - fc < cn)
+        sel = jnp.argmax(ok, axis=1)  # unique hit: canonical prefix property
+        lsel = sel + 1
+        csel = jnp.take_along_axis(cand, sel[:, None], axis=1)[:, 0]
+        sidx = jnp.take(base, lsel) + csel - jnp.take(first, lsel)
+        sym = jnp.take(order, jnp.clip(sidx, 0, N_SYMBOLS - 1))
+        out_ref[:, pl.dslice(t, 1)] = sym[:, None]
+        return off + lsel
+
+    lax.fori_loop(0, sub, step, rem_ref[...])
+
+
+@functools.partial(
+    jax.jit, static_argnames=("sub", "chunks_per_block", "interpret")
+)
+def huffman_gap_decode_pallas(
+    blob,
+    wstarts,
+    rems,
+    first,
+    count,
+    base,
+    order,
+    *,
+    sub,
+    chunks_per_block=8,
+    interpret=False,
+):
+    """Gap-array parallel canonical-Huffman decode, one launch.
+
+    ``blob`` is the whole container as a flat int32 byte buffer (stays in
+    HBM); ``wstarts``/``rems`` are the (nsub,) per-sub-block window byte
+    starts and bit remainders (``base_byte + gap >> 3`` / ``gap & 7``);
+    ``first``/``count``/``base`` are the (16,) canonical per-length tables
+    and ``order`` the (256,) symbol map from
+    ``entropy.canonical_tables_jax``.  Returns (nsub, sub) int32 decoded
+    bytes; lanes beyond a section's live byte count decode garbage the
+    caller masks (exactly like the XLA scan fallback).
+    """
+    g = chunks_per_block
+    win = window_bytes(sub)
+    b = jnp.asarray(blob, jnp.int32).reshape(1, -1)
+    lpad = _round_up(b.shape[1] + win, 128)
+    b = jnp.pad(b, ((0, 0), (0, lpad - b.shape[1])))
+
+    nsub = wstarts.shape[0]
+    ws = jnp.clip(jnp.asarray(wstarts, jnp.int32), 0, lpad - win)
+    rm = jnp.asarray(rems, jnp.int32)
+    pad = (-nsub) % g
+    if pad:
+        z = jnp.zeros((pad,), jnp.int32)
+        ws = jnp.concatenate([ws, z])
+        rm = jnp.concatenate([rm, z])
+    npad = nsub + pad
+
+    tab = jnp.zeros((8, 128), jnp.int32)
+    tab = tab.at[0, : MAX_CODE_LEN + 1].set(jnp.asarray(first, jnp.int32))
+    tab = tab.at[1, : MAX_CODE_LEN + 1].set(jnp.asarray(count, jnp.int32))
+    tab = tab.at[2, : MAX_CODE_LEN + 1].set(jnp.asarray(base, jnp.int32))
+    tab = tab.at[3:5, :].set(jnp.asarray(order, jnp.int32).reshape(2, 128))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(npad // g,),
+        in_specs=[
+            pl.BlockSpec((g,), lambda i, w_: (i,)),
+            pl.BlockSpec((8, 128), lambda i, w_: (0, 0)),
+            pl.BlockSpec(memory_space=pltpu.ANY),
+        ],
+        out_specs=pl.BlockSpec((g, sub), lambda i, w_: (i, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g, win), jnp.int32),
+            pltpu.SemaphoreType.DMA((1,)),
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(_gap_decode_kernel, sub=sub, win=win, nsub=nsub),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((npad, sub), jnp.int32),
+        cost_estimate=pl.CostEstimate(
+            flops=npad * sub * (2 * MAX_CODE_LEN + 12),
+            bytes_accessed=npad * win * 4 + npad * sub * 4,
+            transcendentals=0,
+        ),
+        interpret=interpret,
+    )(ws, rm, tab, b)
+    return out[:nsub]

@@ -18,6 +18,7 @@ import jax
 from repro.core import autotune
 from repro.kernels import lz_decode as _dec_impl
 from repro.kernels import lz_decode_mono as _dmono_impl
+from repro.kernels import lz_entropy as _ent_impl
 from repro.kernels import lz_fused as _mono_impl
 from repro.kernels import lz_match as _impl
 from repro.kernels import lz_scatter as _scat_impl
@@ -179,6 +180,37 @@ def lz_decode(
             chunk_symbols=flag_bytes.shape[1] * 8,
             direction="decompress",
         ),
+        interpret=_interpret(),
+    )
+
+
+def byte_histogram(buf, start, length):
+    """(n,) int32 byte buffer -> (256,) counts of [start, start+length).
+
+    The entropy stage's code-length front end (core/entropy.py); the
+    sequential-grid Pallas reduction, identical counts to the XLA
+    scatter-add fallback by test."""
+    return _ent_impl.byte_histogram_pallas(
+        buf, start, length, interpret=_interpret()
+    )
+
+
+def huffman_gap_decode(blob, wstarts, rems, first, count, base, order, *, sub):
+    """Gap-array parallel canonical-Huffman bitstream decode (one launch).
+
+    See kernels/lz_entropy.py; block geometry is fixed (8 sub-block lanes
+    per grid step) — sub-block windows are DMA-width-bound, not
+    VMEM-budget-bound like the LZSS kernels, so the autotuner is not
+    consulted here."""
+    return _ent_impl.huffman_gap_decode_pallas(
+        blob,
+        wstarts,
+        rems,
+        first,
+        count,
+        base,
+        order,
+        sub=sub,
         interpret=_interpret(),
     )
 

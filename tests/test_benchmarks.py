@@ -19,6 +19,7 @@ import pathlib
 import numpy as np
 import pytest
 
+fig8 = pytest.importorskip("benchmarks.fig8_ratio")
 fig9 = pytest.importorskip("benchmarks.fig9_throughput")
 fig10 = pytest.importorskip("benchmarks.fig10_decode")
 
@@ -49,16 +50,39 @@ def test_fig9_backend_sweep_smoke(tmp_path):
     assert disk["backends"]["xla"]["seconds_per_call"] > 0
 
 
+def test_fig8_ratio_sweep_smoke(tmp_path):
+    out = tmp_path / "BENCH_ratio.json"
+    rec = fig8.ratio_sweep(
+        _tiny_corpus(), backends=("xla", "fused-mono", "deflate-full"),
+        sweep_nbytes=2048, out_json=str(out), dataset="smoke",
+    )
+    assert out.exists()
+    disk = json.loads(out.read_text())
+    assert disk["benchmark"] == rec["benchmark"] == "fig8_ratio_sweep"
+    assert {"xla", "fused-mono", "deflate-full"} <= set(disk["backends"])
+    for entry in disk["backends"].values():
+        assert entry["ratio"] > 0
+        assert entry["total_bytes"] > 0
+    # generic gain keys: one per non-baseline backend in the sweep
+    assert "xla_over_fused_mono" in disk
+    assert "deflate_full_over_fused_mono" in disk
+    # raw backends emit byte-identical containers, so their gain is exactly 1
+    assert disk["xla_over_fused_mono"] == pytest.approx(1.0)
+
+
 def test_fig10_decoder_sweep_smoke(tmp_path):
     out = tmp_path / "BENCH_decode.json"
     rec = fig10.decoder_sweep(
-        _tiny_corpus(), decoders=("xla-parallel", "fused", "fused-mono"),
+        _tiny_corpus(),
+        decoders=("xla-parallel", "fused", "fused-mono", "deflate-full"),
         sweep_nbytes=2048, out_json=str(out), dataset="smoke",
     )
     assert out.exists()
     disk = json.loads(out.read_text())
     assert disk["benchmark"] == rec["benchmark"] == "fig10_decoder_sweep"
-    assert {"xla-parallel", "fused", "fused-mono"} <= set(disk["decoders"])
+    assert {"xla-parallel", "fused", "fused-mono", "deflate-full"} <= set(
+        disk["decoders"]
+    )
     # generic speedup keys: one per non-baseline decoder in the sweep
     assert "fused_over_xla_parallel" in disk
     assert "fused_mono_over_xla_parallel" in disk
@@ -122,6 +146,35 @@ def test_bench_decode_artifact_schema():
             assert rec[fig10.ratio_key(name)] > 0, name
     assert rec["fused_over_xla_parallel"] > 0
     assert rec["fused_mono_over_xla_parallel"] > 0
+
+
+def test_bench_ratio_artifact_schema():
+    from repro.core import lzss
+
+    rec = _tracked("BENCH_ratio.json")
+    assert rec["benchmark"] == "fig8_ratio_sweep"
+    assert isinstance(rec["platform"], str)
+    assert isinstance(rec["interpret_mode"], bool)
+    # one entry per registered compressor backend: a backend added to the
+    # registry but missing from the tracked sweep means BENCH_ratio.json
+    # went stale (>= not ==: test-registered custom backends come and go)
+    assert set(rec["backends"]) >= set(lzss.available_backends()), (
+        "BENCH_ratio.json is missing registered backends; regenerate via "
+        "benchmarks/fig8_ratio.py (default --backends all)"
+    )
+    for name, entry in rec["backends"].items():
+        assert entry["ratio"] > 1, f"backends[{name}]: corpus must compress"
+        assert 0 < entry["total_bytes"] <= entry["orig_bytes"] * 2, name
+        assert entry["nbytes"] >= MIN_TRACKED_SWEEP_NBYTES, (
+            f"backends[{name}]: nbytes={entry['nbytes']} looks like a "
+            f"bench-smoke run written to the repo root (smoke artifacts "
+            f"belong in /tmp; see the Makefile bench-ratio-smoke target)"
+        )
+    # the headline the sweep exists for: the canonical-Huffman second stage
+    # must strictly beat the LZSS-only container on the tracked corpus
+    assert rec[fig8.ratio_key("deflate-full")] > 1, (
+        "deflate-full ratio regressed to (or below) the LZSS-only baseline"
+    )
 
 
 def test_autotune_cache_artifact_schema(tmp_path):

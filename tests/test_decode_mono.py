@@ -168,8 +168,16 @@ def test_decode_mono_matches_scan_oracle_on_sections():
 
 
 def _golden_cases():
-    cases = sorted(GOLDEN_DIR.glob("*.gplz"))
-    assert cases, f"golden corpus missing under {GOLDEN_DIR}"
+    # method-0 (raw) blobs only: method-1 entropy containers route
+    # exclusively through the "deflate-full" decoder by design (the
+    # mismatch ValueError has its own test in tests/test_decoders.py)
+    cases = [
+        p
+        for p in sorted(GOLDEN_DIR.glob("*.gplz"))
+        if fmt.parse_header(np.frombuffer(p.read_bytes(), np.uint8)).method
+        == fmt.METHOD_RAW
+    ]
+    assert cases, f"raw golden cases missing under {GOLDEN_DIR}"
     return cases
 
 

@@ -23,9 +23,23 @@ def _corpus(seed, n=1200):
 
 
 def test_registry_lists_all_decoders():
-    assert {"xla-parallel", "xla-scan", "fused", "fused-mono"} <= set(
-        lzss.available_decoders()
-    )
+    assert {
+        "xla-parallel", "xla-scan", "fused", "fused-mono", "deflate-full"
+    } <= set(lzss.available_decoders())
+
+
+def test_entropy_pair_registered_both_sides():
+    """The entropy subsystem registers 'deflate-full' as a compressor AND a
+    decoder, and both declare the method-1 container."""
+    from repro.core import format as fmt
+
+    assert "deflate-full" in lzss.available_backends()
+    assert "deflate-full" in lzss.available_decoders()
+    assert pipeline.container_method("deflate-full") == fmt.METHOD_HUFFMAN
+    assert pipeline.container_method("fused-mono") == fmt.METHOD_RAW
+    assert pipeline.container_method("auto") == fmt.METHOD_RAW
+    with pytest.raises(ValueError, match="unknown backend/decoder"):
+        pipeline.container_method("nope")
 
 
 def test_unknown_decoder_rejected():
@@ -145,6 +159,11 @@ def test_all_decoders_identical(symbol_size, level):
     res = lzss.compress(data, cfg)
     raw = data.view(np.uint8).reshape(-1)
     for decoder in lzss.available_decoders():
+        if pipeline.container_method(decoder) != 0:
+            # entropy decoders reject raw containers by design
+            with pytest.raises(ValueError):
+                lzss.decompress(res.data, decoder=decoder)
+            continue
         out = lzss.decompress(res.data, decoder=decoder)
         assert np.array_equal(out, raw), f"decoder {decoder}"
 
@@ -155,11 +174,17 @@ def test_all_decoders_identical(symbol_size, level):
 @pytest.mark.parametrize("backend", sorted(pipeline._BACKENDS))
 @pytest.mark.parametrize("decoder", sorted(pipeline._DECODERS))
 def test_compressor_decoder_cross_product(backend, decoder):
+    """Method-matched pairs roundtrip byte-identically; an entropy container
+    handed to a raw decoder (or vice versa) is a clean ValueError."""
     data = _corpus(3, n=800)
     cfg = lzss.LZSSConfig(
         symbol_size=2, window=32, chunk_symbols=64, backend=backend
     )
     res = lzss.compress(data, cfg)
+    if pipeline.container_method(backend) != pipeline.container_method(decoder):
+        with pytest.raises(ValueError):
+            lzss.decompress(res.data, decoder=decoder)
+        return
     out = lzss.decompress(res.data, decoder=decoder)
     assert np.array_equal(out, data.view(np.uint8).reshape(-1))
 
@@ -175,6 +200,10 @@ def test_batched_decoders_identical():
     cfg = lzss.LZSSConfig(symbol_size=1, window=32, chunk_symbols=128)
     batch = lzss.compress_many(items, cfg)
     for decoder in lzss.available_decoders():
+        if pipeline.container_method(decoder) != 0:
+            with pytest.raises(ValueError):
+                lzss.decompress_many(batch, decoder=decoder)
+            continue
         outs = lzss.decompress_many(batch, decoder=decoder)
         for item, out in zip(items, outs):
             assert np.array_equal(out, item), f"decoder {decoder}"

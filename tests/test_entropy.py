@@ -1,0 +1,557 @@
+"""Entropy-container subsystem (core/entropy.py + kernels/lz_entropy.py).
+
+Covers the layers bottom-up: code-length assignment (host heapq vs the
+in-graph mirror, degenerate histograms, Kraft repair, the stored escape),
+canonical code maps (prefix-freeness, host/jax agreement), the histogram
+and bitstream kernels (Pallas interpret vs XLA fallback, forced via
+``impl=``), the section transcode roundtrip, and the full ``deflate-full``
+container: roundtrips across dtypes/corpora, the worst-case size bound,
+ratio superiority at amortized sizes, config normalization, validation of
+corrupted method-1 metadata, batching, sharded/entropy interplay smoke and
+the grad-compress consumer.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import entropy, format as fmt, lzss, pipeline
+
+# ------------------------------------------------------------ histograms
+
+
+def _hist(counts_dict, n=256):
+    h = np.zeros(n, np.int64)
+    for k, v in counts_dict.items():
+        h[k] = v
+    return h
+
+
+def _kraft(lengths, max_len=entropy.MAX_CODE_LEN):
+    l = np.asarray(lengths)
+    return int(np.where(l > 0, 1 << (max_len - l), 0).sum())
+
+
+ADVERSARIAL_HISTS = {
+    "single-symbol": _hist({7: 1000}),
+    "two-symbols": _hist({0: 1, 255: 1}),
+    "all-equal": np.full(256, 3, np.int64),
+    "one-dominant": _hist({0: 1 << 20, **{i: 1 for i in range(1, 40)}}),
+    # fibonacci counts force a maximally skewed tree (depth ~ n): the
+    # classic worst case for the 15-bit length limit
+    "fibonacci-skew": _hist(
+        {i: f for i, f in enumerate(np.array(
+            [1, 1, 2, 3, 5, 8, 13, 21, 34, 55, 89, 144, 233, 377, 610, 987,
+             1597, 2584, 4181, 6765, 10946, 17711, 28657, 46368], np.int64))}
+    ),
+    "powers-of-two": _hist({i: 1 << i for i in range(20)}),
+    "sparse-tail": _hist({250 + i: 10**i for i in range(5)}),
+}
+
+
+@pytest.mark.parametrize("name", sorted(ADVERSARIAL_HISTS))
+def test_huffman_lengths_host_jax_equal(name):
+    """The in-graph merge loop reproduces the host heapq build exactly
+    (tie order included) on every adversarial histogram."""
+    counts = ADVERSARIAL_HISTS[name]
+    host = entropy.huffman_code_lengths(counts)
+    traced = np.asarray(entropy.huffman_code_lengths_jax(counts))
+    np.testing.assert_array_equal(host, traced, err_msg=name)
+
+
+@pytest.mark.parametrize("name", sorted(ADVERSARIAL_HISTS))
+def test_container_lengths_host_jax_equal(name):
+    counts = ADVERSARIAL_HISTS[name]
+    host = entropy.container_code_lengths(counts)
+    traced = np.asarray(entropy.container_code_lengths_jax(counts))
+    np.testing.assert_array_equal(host, traced, err_msg=name)
+    # and the single-API wrapper takes the host path on concrete input
+    np.testing.assert_array_equal(host, np.asarray(entropy.code_lengths(counts)))
+
+
+def test_code_lengths_traced_path_matches_host():
+    """code_lengths under jit (tracer input) equals the eager host path."""
+    counts = ADVERSARIAL_HISTS["fibonacci-skew"]
+    traced = np.asarray(jax.jit(entropy.code_lengths)(jnp.asarray(counts)))
+    np.testing.assert_array_equal(traced, entropy.code_lengths(counts))
+
+
+def test_single_symbol_histogram_gets_one_bit():
+    l = entropy.huffman_code_lengths(_hist({42: 999}))
+    assert l[42] == 1 and l.sum() == 1
+
+
+def test_all_equal_histogram_is_flat_eight_bit():
+    """256 equally likely symbols -> a perfectly balanced 8-level tree."""
+    l = entropy.huffman_code_lengths(np.full(256, 7, np.int64))
+    assert (l == 8).all()
+
+
+def test_fibonacci_skew_exceeds_limit_then_repairs():
+    counts = ADVERSARIAL_HISTS["fibonacci-skew"]
+    unlimited = entropy.huffman_code_lengths(counts)
+    assert unlimited.max() > entropy.MAX_CODE_LEN  # the limit must matter
+    limited = entropy.limit_code_lengths(unlimited, entropy.MAX_CODE_LEN)
+    assert limited.max() <= entropy.MAX_CODE_LEN
+    assert _kraft(limited) <= 1 << entropy.MAX_CODE_LEN
+    # every present symbol keeps a code, absent symbols stay absent
+    assert ((limited > 0) == (counts > 0)).all()
+    # the in-graph repair makes the identical deterministic choices
+    np.testing.assert_array_equal(
+        limited, np.asarray(entropy.limit_code_lengths_jax(unlimited))
+    )
+
+
+@pytest.mark.parametrize("name", sorted(ADVERSARIAL_HISTS))
+def test_limited_lengths_satisfy_kraft(name):
+    l = entropy.huffman_code_lengths(
+        ADVERSARIAL_HISTS[name], max_len=entropy.MAX_CODE_LEN
+    )
+    assert l.max() <= entropy.MAX_CODE_LEN
+    assert _kraft(l) <= 1 << entropy.MAX_CODE_LEN
+
+
+def test_stored_escape_on_uniform_noise():
+    """An incompressible histogram (uniform bytes) triggers the 8-bit
+    identity escape, so the bitstream can never expand past the raw
+    section: the worst-case container bound depends on this."""
+    rng = np.random.default_rng(0)
+    counts = np.bincount(rng.integers(0, 256, 1 << 16), minlength=256)
+    l = entropy.container_code_lengths(counts)
+    assert (l == entropy.STORED_LEN).all()
+    # ... and the canonical code over all-8 lengths is the identity map
+    codes = entropy.canonical_codes(l)
+    np.testing.assert_array_equal(codes, np.arange(256))
+
+
+def test_empty_histogram_all_zero_lengths():
+    l = entropy.container_code_lengths(np.zeros(256, np.int64))
+    assert (l == 0).all()
+
+
+# ------------------------------------------------------- canonical tables
+
+
+@pytest.mark.parametrize("name", sorted(ADVERSARIAL_HISTS))
+def test_canonical_codes_prefix_free(name):
+    l = entropy.huffman_code_lengths(
+        ADVERSARIAL_HISTS[name], max_len=entropy.MAX_CODE_LEN
+    )
+    codes = entropy.canonical_codes(l)
+    live = np.nonzero(l)[0]
+    pads = [
+        (int(codes[s]) << (entropy.MAX_CODE_LEN - int(l[s])), int(l[s]))
+        for s in live
+    ]
+    for i, (ci, li) in enumerate(pads):
+        for j, (cj, lj) in enumerate(pads):
+            if i == j:
+                continue
+            m = min(li, lj)
+            assert (ci >> (entropy.MAX_CODE_LEN - m)) != (
+                cj >> (entropy.MAX_CODE_LEN - m)
+            ), f"{name}: codes for {live[i]} and {live[j]} share a prefix"
+
+
+@pytest.mark.parametrize("name", sorted(ADVERSARIAL_HISTS))
+def test_canonical_tables_jax_matches_host(name):
+    l = entropy.huffman_code_lengths(
+        ADVERSARIAL_HISTS[name], max_len=entropy.MAX_CODE_LEN
+    )
+    tabs = {k: np.asarray(v) for k, v in entropy.canonical_tables_jax(l).items()}
+    np.testing.assert_array_equal(tabs["codes"], entropy.canonical_codes(l))
+    # decode-map invariants: order sorts by (length, symbol); base/count
+    # partition the live symbols by length
+    assert tabs["count"].sum() == (l > 0).sum()
+    for ll in range(1, entropy.MAX_CODE_LEN + 1):
+        segment = tabs["order"][
+            tabs["base"][ll] : tabs["base"][ll] + tabs["count"][ll]
+        ]
+        assert (l[segment] == ll).all()
+        assert (np.diff(segment) > 0).all() if segment.size > 1 else True
+
+
+# ----------------------------------------------- histogram kernel parity
+
+
+def test_byte_histogram_impls_agree():
+    rng = np.random.default_rng(1)
+    buf = jnp.asarray(rng.integers(0, 256, 5000), jnp.int32)
+    for start, length in [(0, 5000), (17, 3000), (4999, 1), (100, 0)]:
+        xla = np.asarray(entropy.byte_histogram(buf, start, length, impl="xla"))
+        pal = np.asarray(
+            entropy.byte_histogram(buf, start, length, impl="pallas")
+        )
+        np.testing.assert_array_equal(xla, pal, err_msg=f"{start}+{length}")
+        want = np.bincount(
+            np.asarray(buf)[start : start + length], minlength=256
+        )
+        np.testing.assert_array_equal(xla, want)
+
+
+def test_use_pallas_selection(monkeypatch):
+    assert entropy._use_pallas("pallas") is True
+    assert entropy._use_pallas("xla") is False
+    with pytest.raises(ValueError, match="impl"):
+        entropy._use_pallas("cuda")
+    monkeypatch.setenv("REPRO_ENTROPY_PALLAS", "0")
+    assert entropy._use_pallas(None) is False
+    monkeypatch.setenv("REPRO_ENTROPY_PALLAS", "1")
+    assert entropy._use_pallas(None) is True
+    monkeypatch.delenv("REPRO_ENTROPY_PALLAS")
+    import jax as _jax
+
+    monkeypatch.setattr(_jax, "default_backend", lambda: "tpu")
+    assert entropy._use_pallas(None) is True
+    monkeypatch.setattr(_jax, "default_backend", lambda: "cpu")
+    assert entropy._use_pallas(None) is False
+
+
+# ------------------------------------------------- section transcode
+
+
+def _section_roundtrip(section_bytes, cap, impl):
+    buf = jnp.asarray(np.pad(section_bytes, (0, 4)), jnp.int32)
+    counts = np.bincount(section_bytes, minlength=256)
+    l = entropy.container_code_lengths(counts)
+    stream, nbits, gaps = entropy.encode_section(
+        buf, 0, section_bytes.size, jnp.asarray(l, jnp.int32), cap=cap
+    )
+    assert int(nbits) == int((counts * l).sum())
+    assert int(nbits) <= 8 * section_bytes.size  # stored escape bound
+    out = entropy.decode_section(
+        stream, 0, gaps, jnp.asarray(l, jnp.int32),
+        count=section_bytes.size, cap=cap, impl=impl,
+    )
+    np.testing.assert_array_equal(
+        np.asarray(out)[: section_bytes.size], section_bytes
+    )
+    return int(nbits)
+
+
+@pytest.mark.parametrize("impl", ["xla", "pallas"])
+def test_section_roundtrip_multi_subblock(impl):
+    """> 1 sub-block: every gap entry point must land on a codeword."""
+    rng = np.random.default_rng(2)
+    sec = np.repeat(rng.integers(0, 40, 700), rng.integers(1, 4, 700))
+    sec = sec.astype(np.int64)[:1500]
+    nbits = _section_roundtrip(sec, cap=1536, impl=impl)
+    assert nbits < 8 * sec.size  # skewed bytes actually compress
+
+
+@pytest.mark.parametrize("impl", ["xla", "pallas"])
+def test_section_roundtrip_degenerate(impl):
+    one = np.full(600, 9, np.int64)  # single-symbol: 1-bit codes
+    assert _section_roundtrip(one, cap=1024, impl=impl) == 600
+    rng = np.random.default_rng(3)
+    # noisy bytes: a small sample still has a slightly skewed histogram,
+    # so the code may squeeze under 8 bits/byte — but the stored escape
+    # guarantees it never goes OVER (checked inside _section_roundtrip)
+    noise = rng.integers(0, 256, 600).astype(np.int64)
+    assert _section_roundtrip(noise, cap=1024, impl=impl) <= 8 * 600
+    # an exactly-flat histogram pins the identity code: 8 bits/byte even
+    flat = np.tile(np.arange(256, dtype=np.int64), 3)
+    assert _section_roundtrip(flat, cap=1024, impl=impl) == 8 * flat.size
+
+
+def test_encode_section_gap_entries_are_codeword_offsets():
+    sec = np.tile(np.arange(8, dtype=np.int64), 200)  # 1600 bytes, 3 subs
+    buf = jnp.asarray(sec, jnp.int32)
+    l = entropy.container_code_lengths(np.bincount(sec, minlength=256))
+    _, nbits, gaps = entropy.encode_section(
+        buf, 0, sec.size, jnp.asarray(l, jnp.int32), cap=sec.size
+    )
+    gaps = np.asarray(gaps)
+    sub = 1 << fmt.DEFAULT_SUB_LOG2
+    csum = np.cumsum(l[sec])
+    want = np.concatenate([[0], csum[:-1]])[::sub][: gaps.size]
+    np.testing.assert_array_equal(gaps, want)
+    assert int(nbits) == int(csum[-1])
+
+
+# ----------------------------------------------- full-container behavior
+
+DTYPE_CORPORA = {
+    "u8-runs": lambda rng: np.repeat(
+        rng.integers(0, 12, 400), rng.integers(1, 6, 400)
+    ).astype(np.uint8)[:1200],
+    "u16-deltas": lambda rng: rng.integers(-3, 4, 700)
+    .cumsum()
+    .astype(np.int16),
+    "f32-waves": lambda rng: np.sin(np.linspace(0, 8, 500)).astype(np.float32),
+    "i32-ramp": lambda rng: (np.arange(400, dtype=np.int32) * 7) % 512,
+    "empty": lambda rng: np.zeros(0, np.uint8),
+    "one-byte": lambda rng: np.array([170], np.uint8),
+}
+
+_S = {"u8-runs": 1, "u16-deltas": 2, "f32-waves": 4, "i32-ramp": 4,
+      "empty": 1, "one-byte": 1}
+
+
+@pytest.mark.parametrize("name", sorted(DTYPE_CORPORA))
+def test_deflate_full_roundtrip(name):
+    data = DTYPE_CORPORA[name](np.random.default_rng(5))
+    raw = np.ascontiguousarray(data).view(np.uint8).reshape(-1)
+    cfg = lzss.LZSSConfig(
+        symbol_size=_S[name], window=64, chunk_symbols=128,
+        backend="deflate-full",
+    )
+    res = lzss.compress(data, cfg)
+    h = fmt.parse_header(np.asarray(res.data))
+    assert h.version == fmt.VERSION
+    assert h.method == fmt.METHOD_HUFFMAN
+    assert h.sub_log2 == fmt.DEFAULT_SUB_LOG2
+    np.testing.assert_array_equal(lzss.decompress(res.data), raw)
+    # worst-case bound is unconditional
+    nsym = -(-max(raw.size, 1) // _S[name])
+    nc = -(-nsym // 128)
+    assert res.total_bytes <= fmt.entropy_max_compressed_bytes(
+        nc * 128 * _S[name], _S[name], 128
+    )
+
+
+def test_deflate_full_pallas_xla_identical():
+    """Forcing the Pallas kernels (interpret mode off-TPU) changes neither
+    the container bytes nor the decoded output."""
+    rng = np.random.default_rng(6)
+    data = np.repeat(rng.integers(0, 30, 900), rng.integers(1, 5, 900))
+    data = data.astype(np.uint8)[:2200]
+    cfg = lzss.LZSSConfig(
+        symbol_size=1, window=64, chunk_symbols=128, backend="deflate-full"
+    )
+    res_x = lzss.compress(data, cfg)
+    out_x = lzss.decompress(res_x.data)
+    import os
+
+    os.environ["REPRO_ENTROPY_PALLAS"] = "1"
+    jax.clear_caches()
+    try:
+        res_p = lzss.compress(data, cfg)
+        out_p = lzss.decompress(res_p.data)
+    finally:
+        del os.environ["REPRO_ENTROPY_PALLAS"]
+        jax.clear_caches()
+    np.testing.assert_array_equal(res_x.data, res_p.data)
+    np.testing.assert_array_equal(out_x, out_p)
+    np.testing.assert_array_equal(out_x, data)
+
+
+def test_ratio_strictly_better_at_amortized_sizes():
+    """On >= 32 KiB skewed corpora the entropy container must strictly beat
+    the LZSS-only container (the tentpole's acceptance criterion); text-like
+    and quant-code-like corpora both."""
+    rng = np.random.default_rng(7)
+    text = rng.choice(
+        np.frombuffer(b"the quick brown fox jumps over the lazy dog ",
+                      np.uint8),
+        1 << 15,
+        p=None,
+    ).astype(np.uint8)
+    quant = np.repeat(
+        rng.integers(120, 136, 1 << 14), rng.integers(1, 5, 1 << 14)
+    ).astype(np.uint8)[: 1 << 15]
+    for name, corpus in [("text", text), ("quant", quant)]:
+        raw_cfg = lzss.LZSSConfig(
+            symbol_size=1, window=128, chunk_symbols=2048,
+            backend="fused-mono",
+        )
+        ent_cfg = lzss.LZSSConfig(
+            symbol_size=1, window=128, chunk_symbols=2048,
+            backend="deflate-full",
+        )
+        r_raw = lzss.compress(corpus, raw_cfg)
+        r_ent = lzss.compress(corpus, ent_cfg)
+        assert r_ent.total_bytes < r_raw.total_bytes, (
+            f"{name}: entropy {r_ent.total_bytes} >= raw {r_raw.total_bytes}"
+        )
+        np.testing.assert_array_equal(lzss.decompress(r_ent.data), corpus)
+
+
+def test_incompressible_bound_holds():
+    rng = np.random.default_rng(8)
+    data = rng.integers(0, 256, 4096).astype(np.uint8)
+    cfg = lzss.LZSSConfig(
+        symbol_size=1, window=64, chunk_symbols=128, backend="deflate-full"
+    )
+    res = lzss.compress(data, cfg)
+    assert res.total_bytes <= fmt.entropy_max_compressed_bytes(4096, 1, 128)
+    np.testing.assert_array_equal(lzss.decompress(res.data), data)
+
+
+def test_entropy_meta_bound_documented_form():
+    """entropy_max_compressed_bytes = raw worst case + fixed metadata +
+    gap arrays: spot-check the arithmetic the bound tests rely on."""
+    n, s, c = 4096, 1, 128
+    raw_cap = fmt.max_compressed_bytes(n, s, c)
+    assert fmt.entropy_max_compressed_bytes(n, s, c) == raw_cap + (
+        fmt.entropy_meta_bytes(
+            -(-n // (s * c)) * ((c + 7) // 8), -(-n // (s * c)) * c * s
+        )
+    )
+
+
+# -------------------------------------------------- routing and guards
+
+
+def test_config_normalization():
+    cfg = lzss.LZSSConfig(backend="deflate-full")
+    assert cfg.decoder == "deflate-full"  # auto pairs with the backend
+    cfg2 = lzss.LZSSConfig(backend="deflate-full", decoder="deflate-full")
+    assert cfg2.decoder == "deflate-full"
+    with pytest.raises(ValueError, match="deflate-full"):
+        lzss.LZSSConfig(decoder="deflate-full")  # entropy decode needs
+        # an entropy container: raw backends never produce one
+
+
+def test_entropy_container_rejects_raw_decoders():
+    data = np.arange(500, dtype=np.uint8)
+    cfg = lzss.LZSSConfig(
+        symbol_size=1, window=32, chunk_symbols=64, backend="deflate-full"
+    )
+    res = lzss.compress(data, cfg)
+    for decoder in ("fused", "fused-mono", "xla-parallel", "xla-scan"):
+        with pytest.raises(ValueError, match="entropy"):
+            lzss.decompress(res.data, decoder=decoder)
+    # auto and the explicit key both work
+    np.testing.assert_array_equal(lzss.decompress(res.data), data)
+    np.testing.assert_array_equal(
+        lzss.decompress(res.data, decoder="deflate-full"), data
+    )
+
+
+def test_raw_container_rejects_entropy_decoder():
+    data = np.arange(500, dtype=np.uint8)
+    res = lzss.compress(
+        data, lzss.LZSSConfig(symbol_size=1, window=32, chunk_symbols=64)
+    )
+    with pytest.raises(ValueError, match="method-1"):
+        lzss.decompress(res.data, decoder="deflate-full")
+
+
+def test_version_mismatch_names_both_versions():
+    data = np.arange(300, dtype=np.uint8)
+    res = lzss.compress(
+        data, lzss.LZSSConfig(symbol_size=1, window=32, chunk_symbols=64)
+    )
+    bad = res.data.copy()
+    bad[4] = 7
+    with pytest.raises(ValueError) as ei:
+        lzss.decompress(bad)
+    msg = str(ei.value)
+    assert "7" in msg and str(fmt.SUPPORTED_VERSIONS) in msg
+
+
+def _entropy_container(n=1500, seed=9, chunk_symbols=128):
+    rng = np.random.default_rng(seed)
+    data = np.repeat(rng.integers(0, 20, n), rng.integers(1, 4, n))
+    data = data.astype(np.uint8)[:n]
+    cfg = lzss.LZSSConfig(
+        symbol_size=1, window=64, chunk_symbols=chunk_symbols,
+        backend="deflate-full",
+    )
+    return lzss.compress(data, cfg), data
+
+
+def test_validate_rejects_corrupt_entropy_metadata():
+    res, _ = _entropy_container()
+    h = fmt.parse_header(np.asarray(res.data))
+    sec = fmt.HEADER_BYTES + 8 * h.n_chunks
+
+    bad = res.data.copy()
+    bad[41] = 3  # sub_log2 drifted from the pinned value; pad so the
+    # (sub-dependent) declared total still fits and this check is reached
+    bad = np.concatenate([bad, np.zeros(1 << 14, np.uint8)])
+    with pytest.raises(ValueError, match="sub-block log2"):
+        lzss.decompress(bad)
+
+    bad = res.data.copy()
+    bad[sec : sec + 128] = 0x11  # 256 one-bit codes: Kraft oversubscribed
+    with pytest.raises(ValueError, match="corrupted container"):
+        lzss.decompress(bad)
+
+    bad = res.data.copy()
+    # flag_bits just past the 8 * flag_bytes stored-escape cap (padded so
+    # the slightly larger declared total passes the truncation check)
+    over = 8 * h.flag_bytes + 8
+    bad[sec + 256 : sec + 264] = np.frombuffer(
+        int(over).to_bytes(8, "little"), np.uint8
+    )
+    bad = np.concatenate([bad, np.zeros(1 << 10, np.uint8)])
+    with pytest.raises(ValueError, match="corrupted container"):
+        lzss.decompress(bad)
+
+    bad = res.data.copy()
+    # non-monotone flag gap array (first entry must be bit offset 0)
+    bad[sec + fmt.ENTROPY_META_FIXED] = 0xFF
+    with pytest.raises(ValueError, match="corrupted container"):
+        lzss.decompress(bad)
+
+
+def test_truncated_entropy_container_raises():
+    res, _ = _entropy_container()
+    for cut in (1, 8, res.total_bytes // 2):
+        with pytest.raises(ValueError):
+            lzss.decompress(res.data[: res.total_bytes - cut])
+
+
+def test_entropy_container_padded_blob_accepted():
+    res, data = _entropy_container()
+    padded = np.concatenate([res.data, np.zeros(99, np.uint8)])
+    np.testing.assert_array_equal(lzss.decompress(padded), data)
+
+
+# ----------------------------------------------------- batched dispatch
+
+
+def test_compress_many_matches_single():
+    rng = np.random.default_rng(10)
+    # equal sizes: ragged batches pad to the common chunk count, so only
+    # same-size items produce byte-identical single-buffer containers
+    # (ragged entropy roundtrips ride test_decoders / the property suite)
+    items = [
+        np.repeat(rng.integers(0, 9, 300), 3).astype(np.uint8)[:768],
+        rng.integers(0, 5, 768).astype(np.uint8),
+        np.zeros(768, np.uint8),
+    ]
+    cfg = lzss.LZSSConfig(
+        symbol_size=1, window=32, chunk_symbols=128, backend="deflate-full"
+    )
+    batch = lzss.compress_many(items, cfg)
+    outs = lzss.decompress_many(batch)
+    singles = [lzss.compress(i, cfg) for i in items]
+    for item, out in zip(items, outs):
+        np.testing.assert_array_equal(out, item)
+    # batched rows equal the single-buffer containers byte-for-byte
+    for row, total, single in zip(batch.data, batch.total_bytes, singles):
+        assert int(total) == single.total_bytes
+        np.testing.assert_array_equal(
+            np.asarray(row)[: int(total)], single.data
+        )
+
+
+def test_decompress_many_mixed_methods_rejected():
+    res_ent, data = _entropy_container(chunk_symbols=128)
+    res_raw = lzss.compress(
+        data, lzss.LZSSConfig(symbol_size=1, window=64, chunk_symbols=128)
+    )
+    with pytest.raises(ValueError, match="method="):
+        lzss.decompress_many([res_ent.data, res_raw.data])
+
+
+def test_grad_compress_with_entropy_backend():
+    """grad_compress threads the entropy pair end to end: compressible
+    slabs ride method-1 containers, the wire stays budget-shaped, and the
+    roundtrip is u16-lossless."""
+    from repro.optim import grad_compress as gc
+
+    g = np.repeat(np.linspace(-0.1, 0.1, 256).astype(np.float32), 32)
+    cfg = lzss.LZSSConfig(
+        symbol_size=2, window=32, chunk_symbols=512, backend="deflate-full"
+    )
+    wire = gc.compress_leaf(jnp.asarray(g), cfg, ratio_cap=1.0)
+    out = np.asarray(gc.decompress_leaf(wire, g.shape, cfg, ratio_cap=1.0))
+    codes, scale = gc.quantize_u16(jnp.asarray(g))
+    want = np.asarray(gc.dequantize_u16(codes, scale))
+    np.testing.assert_allclose(out, want, atol=1e-12)

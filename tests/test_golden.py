@@ -3,12 +3,20 @@
 Every case compresses a tiny deterministic input (per dtype x S x W) and
 compares the container byte-for-byte against the blob checked in under
 ``tests/golden/``.  Any silent change to the wire format — header layout,
-table encoding, section order, token encoding — fails here with an
-explicit "bump the format version" message instead of shipping containers
-old readers can't parse.
+table encoding, section order, token encoding, entropy metadata — fails
+here with an explicit "bump the format version" message instead of shipping
+containers old readers can't parse.
 
-Regenerate (ONLY after an intentional format change, together with a
-``core/format.py`` ``VERSION`` bump):
+Two generations are pinned:
+
+  * ``tests/golden/*.gplz`` — current-VERSION blobs: the method-0 cases and
+    the method-1 (``deflate-full``) entropy cases.
+  * ``tests/golden/v1/*.gplz`` — the frozen VERSION-1 corpus from before
+    the entropy format bump.  These are never regenerated: they guard that
+    this reader keeps decoding already-shipped version-1 containers.
+
+Regenerate the current corpus (ONLY after an intentional format change,
+together with a ``core/format.py`` ``VERSION`` bump):
 
     PYTHONPATH=src python tests/test_golden.py --regen
 """
@@ -21,6 +29,7 @@ import pytest
 from repro.core import format as fmt, lzss
 
 GOLDEN_DIR = pathlib.Path(__file__).resolve().parent / "golden"
+V1_DIR = GOLDEN_DIR / "v1"
 
 REGEN_HINT = (
     "container bytes changed for a checked-in golden input — the on-disk "
@@ -72,24 +81,38 @@ CASES = {
     "f32_s4_w255_c128": (_f32_waves, 4, 255, 128),
 }
 
+# method-1 cases: same builders, compressed through the entropy backend —
+# pins the VERSION-2 metadata layout (codebooks, bit counts, gap arrays,
+# bitstream packing) byte-for-byte
+ENTROPY_CASES = {
+    "u8_s1_w32_c64_deflate": (_u8_runs, 1, 32, 64),
+    "i16_s2_w128_c128_deflate": (_i16_deltas, 2, 128, 128),
+    "f32_s4_w64_c64_deflate": (_f32_waves, 4, 64, 64),
+}
+
+ALL_CASES = {**CASES, **ENTROPY_CASES}
+
 
 def _case_cfg(name):
-    _, s, w, c = CASES[name]
-    return lzss.LZSSConfig(symbol_size=s, window=w, chunk_symbols=c, backend="xla")
+    _, s, w, c = ALL_CASES[name]
+    backend = "deflate-full" if name in ENTROPY_CASES else "xla"
+    return lzss.LZSSConfig(
+        symbol_size=s, window=w, chunk_symbols=c, backend=backend
+    )
 
 
-def _golden_paths(name):
-    return GOLDEN_DIR / f"{name}.input.bin", GOLDEN_DIR / f"{name}.gplz"
+def _golden_paths(name, root=GOLDEN_DIR):
+    return root / f"{name}.input.bin", root / f"{name}.gplz"
 
 
-def _load_case(name):
+def _load_case(name, root=GOLDEN_DIR):
     """Checked-in input bytes + golden container bytes.
 
     The inputs are stored on disk too (not regenerated from the builders at
     test time): np.sin and Generator bit-streams are not guaranteed stable
     across numpy versions/platforms, and an input drift would masquerade as
     a format regression."""
-    inp, gold = _golden_paths(name)
+    inp, gold = _golden_paths(name, root)
     for path in (inp, gold):
         assert path.exists(), (
             f"golden file {path.name} missing — regenerate the corpus: "
@@ -101,7 +124,7 @@ def _load_case(name):
     )
 
 
-@pytest.mark.parametrize("name", sorted(CASES))
+@pytest.mark.parametrize("name", sorted(ALL_CASES))
 def test_golden_blob_is_stable(name):
     data, golden = _load_case(name)
     res = lzss.compress(data, _case_cfg(name))
@@ -110,22 +133,56 @@ def test_golden_blob_is_stable(name):
     )
 
 
-@pytest.mark.parametrize("name", sorted(CASES))
+@pytest.mark.parametrize("name", sorted(ALL_CASES))
 def test_golden_blob_decodes_to_input(name):
     """The checked-in bytes (not just freshly produced ones) must decode —
     this is what guards real backward readability of shipped containers."""
     data, golden = _load_case(name)
     h = fmt.parse_header(golden)
-    assert h.symbol_size == CASES[name][1] and h.window == CASES[name][2]
+    assert h.version == fmt.VERSION
+    assert h.symbol_size == ALL_CASES[name][1]
+    assert h.window == ALL_CASES[name][2]
+    want_method = (
+        fmt.METHOD_HUFFMAN if name in ENTROPY_CASES else fmt.METHOD_RAW
+    )
+    assert h.method == want_method
     assert np.array_equal(lzss.decompress(golden), data)
+
+
+@pytest.mark.parametrize("name", sorted(CASES))
+def test_version1_golden_blob_still_decodes(name):
+    """Frozen VERSION-1 blobs (pre-entropy format) must keep decoding:
+    version 1 stays in SUPPORTED_VERSIONS and parses as method 0."""
+    data, golden = _load_case(name, root=V1_DIR)
+    h = fmt.parse_header(golden)
+    assert h.version == 1
+    assert h.method == fmt.METHOD_RAW
+    assert np.array_equal(lzss.decompress(golden), data)
+
+
+def test_version_mismatch_raises_naming_versions():
+    """A blob declaring a version this reader doesn't speak is a ValueError
+    naming BOTH the container's version and the supported set — the
+    regression guard for the VERSION-2 bump."""
+    _, golden = _load_case(sorted(CASES)[0])
+    bad = golden.copy()
+    bad[4] = 3
+    with pytest.raises(ValueError) as ei:
+        fmt.parse_header(bad)
+    msg = str(ei.value)
+    assert "3" in msg and str(fmt.SUPPORTED_VERSIONS) in msg
+    with pytest.raises(ValueError):
+        lzss.decompress(bad)
 
 
 def _regen():
     GOLDEN_DIR.mkdir(exist_ok=True)
-    for name in sorted(CASES):
-        build = CASES[name][0]
-        # seeds must not depend on PYTHONHASHSEED: derive from the name bytes
-        seed = int.from_bytes(name.encode(), "little") % (1 << 32)
+    for name in sorted(ALL_CASES):
+        build = ALL_CASES[name][0]
+        # seeds must not depend on PYTHONHASHSEED: derive from the name
+        # bytes; entropy cases reuse their base case's input byte-for-byte
+        base = name[: -len("_deflate")] if name in ENTROPY_CASES else name
+        seed = int.from_bytes(base.encode(), "little") % (1 << 32)
         data = build(np.random.default_rng(seed))
         raw = np.ascontiguousarray(data).view(np.uint8).reshape(-1)
         res = lzss.compress(raw, _case_cfg(name))

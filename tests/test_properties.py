@@ -10,10 +10,20 @@ import pytest
 
 pytest.importorskip("hypothesis")
 
-from hypothesis import given, strategies as st  # noqa: E402
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 import test_conformance as conf  # noqa: E402  (same-dir pytest import)
-from repro.core import encode, lzss, match, quant  # noqa: E402
+from repro.core import encode, format as fmt, lzss, match  # noqa: E402
+from repro.core import pipeline, quant  # noqa: E402
+
+RAW_BACKENDS = sorted(
+    b for b in lzss.available_backends()
+    if pipeline.container_method(b) == fmt.METHOD_RAW
+)
+RAW_DECODERS = sorted(
+    d for d in lzss.available_decoders()
+    if pipeline.container_method(d) == fmt.METHOD_RAW
+)
 
 
 def roundtrip(data: np.ndarray, cfg: lzss.LZSSConfig):
@@ -69,15 +79,25 @@ def test_differential_fuzz_property(case, backend, decoder):
     """Every registered compressor x decoder pair (sampled per example; the
     full deterministic product lives in tests/test_conformance.py) must
     emit the kernels/ref.py oracle bytes and roundtrip bit-exactly on
-    adversarial corpora over dtype x window level x chunk_symbols."""
+    adversarial corpora over dtype x window level x chunk_symbols.  Entropy
+    backends wrap the oracle bytes in a bitstream, so for them the oracle
+    comparison is symbol-level and mismatched decoders must raise."""
     arr, s, window, chunk_symbols = case
     cfg = lzss.LZSSConfig(symbol_size=s, window=window,
                           chunk_symbols=chunk_symbols, backend=backend)
-    oracle = conf.oracle_container(arr, cfg)
     res = lzss.compress(arr, cfg)
     raw = np.ascontiguousarray(arr).view(np.uint8).reshape(-1)
-    assert res.total_bytes == oracle.size, (backend, cfg)
-    np.testing.assert_array_equal(res.data, oracle, err_msg=f"{backend} {cfg}")
+    method = pipeline.container_method(backend)
+    if method == fmt.METHOD_RAW:
+        oracle = conf.oracle_container(arr, cfg)
+        assert res.total_bytes == oracle.size, (backend, cfg)
+        np.testing.assert_array_equal(
+            res.data, oracle, err_msg=f"{backend} {cfg}"
+        )
+    if pipeline.container_method(decoder) != method:
+        with pytest.raises(ValueError):
+            lzss.decompress(res.data, decoder=decoder)
+        return
     out = lzss.decompress(res.data, decoder=decoder)
     np.testing.assert_array_equal(out, raw, err_msg=f"{backend}/{decoder}")
 
@@ -106,10 +126,13 @@ def test_roundtrip_low_entropy_property(vals):
 
 @given(st.lists(st.integers(0, 3), min_size=1, max_size=400))
 def test_backends_identical_property(vals):
-    """Every registered backend emits byte-identical containers."""
+    """Every registered method-0 backend emits byte-identical containers
+    (the entropy backend emits a method-1 container by design — its
+    symbol-level agreement rides test_differential_fuzz_property and
+    test_deflate_full_roundtrip_property)."""
     arr = np.array(vals, np.uint8)
     results = []
-    for backend in lzss.available_backends():
+    for backend in RAW_BACKENDS:
         cfg = lzss.LZSSConfig(symbol_size=1, window=16, chunk_symbols=64,
                               backend=backend)
         results.append(lzss.compress(arr, cfg).data)
@@ -119,13 +142,34 @@ def test_backends_identical_property(vals):
 
 @given(st.lists(st.integers(0, 3), min_size=1, max_size=400))
 def test_decoders_identical_property(vals):
-    """Every registered decoder reconstructs the original bytes exactly."""
+    """Every registered method-0 decoder reconstructs the original bytes."""
     arr = np.array(vals, np.uint8)
     cfg = lzss.LZSSConfig(symbol_size=1, window=16, chunk_symbols=64)
     res = lzss.compress(arr, cfg)
-    for decoder in lzss.available_decoders():
+    for decoder in RAW_DECODERS:
         out = lzss.decompress(res.data, decoder=decoder)
         np.testing.assert_array_equal(out, arr, err_msg=f"decoder {decoder}")
+
+
+@settings(max_examples=20)
+@given(data=st.binary(min_size=0, max_size=1500))
+def test_deflate_full_roundtrip_property(data):
+    """The entropy container roundtrips arbitrary bytes AND never grows past
+    the documented worst case: incompressible input hits the stored-length
+    escape (all code lengths forced to 8), so the bitstream is bounded by
+    the raw section bytes and the whole container by
+    ``fmt.entropy_max_compressed_bytes``."""
+    arr = np.frombuffer(data, np.uint8)
+    cfg = lzss.LZSSConfig(symbol_size=1, window=32, chunk_symbols=128,
+                          backend="deflate-full")
+    res = lzss.compress(arr, cfg)
+    h = fmt.parse_header(np.asarray(res.data))
+    assert h.version == fmt.VERSION and h.method == fmt.METHOD_HUFFMAN
+    assert res.total_bytes <= fmt.entropy_max_compressed_bytes(
+        max(arr.size, 1), 1, 128
+    )
+    out = lzss.decompress(res.data)
+    np.testing.assert_array_equal(out, arr)
 
 
 @given(

@@ -159,6 +159,48 @@ def test_sharded_degenerate_matches_xla_byte_for_byte():
     assert np.array_equal(one.data, lzss.compress(items[0], lzss.LZSSConfig(**kw)).data)
 
 
+def test_sharded_entropy_degenerate_matches_single_device():
+    """Entropy (method-1) batches thread through the sharded runner: with a
+    1-device mesh the containers must be byte-identical to the meshless
+    entropy dispatch, and decode must route the per-shard inner decoder to
+    'deflate-full' automatically."""
+    from repro.core import format as fmt
+
+    mesh = jax.make_mesh((1,), ("data",))
+    items = _buffers(11, 3)
+    kw = dict(symbol_size=1, window=32, chunk_symbols=64,
+              backend="deflate-full")
+    ref = lzss.compress_many(items, lzss.LZSSConfig(**kw))
+    got = lzss.compress_many(items, lzss.LZSSConfig(**kw, mesh=mesh))
+    assert np.array_equal(ref.data, got.data)
+    assert np.array_equal(ref.total_bytes, got.total_bytes)
+    assert fmt.parse_header(got.data[0]).method == fmt.METHOD_HUFFMAN
+    for mesh_arg in (None, mesh):
+        outs = lzss.decompress_many(got, mesh=mesh_arg)
+        for item, out in zip(items, outs):
+            assert np.array_equal(out, item), mesh_arg is None
+    # an explicit raw decoder on the entropy batch stays a clean error
+    with pytest.raises(ValueError, match="entropy"):
+        lzss.decompress_many(got, decoder="xla-parallel")
+
+
+@multidevice
+def test_sharded_entropy_byte_identity_8dev():
+    """Forced 8-device mesh, uneven B: sharded entropy compression is
+    byte-identical to single-device, and the sharded decode reconstructs."""
+    mesh = jax.make_mesh((8,), ("data",))
+    items = _buffers(12, 5)
+    kw = dict(symbol_size=1, window=32, chunk_symbols=64,
+              backend="deflate-full")
+    ref = lzss.compress_many(items, lzss.LZSSConfig(**kw))
+    got = lzss.compress_many(items, lzss.LZSSConfig(**kw, mesh=mesh))
+    assert np.array_equal(ref.data, got.data)
+    assert np.array_equal(ref.total_bytes, got.total_bytes)
+    outs = lzss.decompress_many(got, mesh=mesh)
+    for item, out in zip(items, outs):
+        assert np.array_equal(out, item)
+
+
 @multidevice
 @pytest.mark.parametrize("b", [8, 5, 11])
 def test_sharded_byte_identity_vs_single_device(b):
