@@ -6,16 +6,18 @@
 # CI (.github/workflows/ci.yml) runs: test-fast + bench-smoke + check-bench
 # on a Python 3.10/3.11 matrix (test-fast includes the golden-corpus format
 # pin, tests/test_golden.py), test-multidevice + bench-sharded-smoke in a
-# separate multidevice lane (8 forced host devices), test-property as its
-# own hypothesis lane, and `ruff check` / `ruff format --check` as a
-# separate lint job.
+# separate multidevice lane (8 forced host devices), test-serving +
+# bench-kv-smoke in a serving lane (also 8 forced host devices, for the
+# sharded eviction/restore tests), test-property as its own hypothesis
+# lane, and `ruff check` / `ruff format --check` as a separate lint job.
 
 PY ?= python
 
-.PHONY: test test-fast test-multidevice test-property check-bench lint \
-	bench-pipeline bench-decode bench-ratio bench-sharded \
-	bench-sharded-smoke bench-decode-smoke bench-ratio-smoke bench-smoke \
-	bench
+.PHONY: test test-fast test-multidevice test-property test-serving \
+	check-bench lint \
+	bench-pipeline bench-decode bench-ratio bench-sharded bench-kv \
+	bench-sharded-smoke bench-decode-smoke bench-ratio-smoke \
+	bench-kv-smoke bench-smoke bench
 
 test:
 	PYTHONPATH=src $(PY) -m pytest -x -q
@@ -43,6 +45,13 @@ test-multidevice:
 	PYTHONPATH=src XLA_FLAGS=--xla_force_host_platform_device_count=8 \
 		$(PY) -m pytest -q tests/test_sharding.py -m "not slow"
 
+# Serving lane: engine + paged-KV capacity-tier tests.  Runs with 8 forced
+# host devices so the kv_mesh-sharded eviction/restore tests execute instead
+# of skipping (single-device tests are unaffected by the flag).
+test-serving:
+	PYTHONPATH=src XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+		$(PY) -m pytest -q tests/test_serving.py tests/test_serving_paged.py
+
 # Schema-validate the tracked BENCH_*.json perf records (catches a smoke run
 # accidentally written to the repo root before it clobbers the trajectory)
 # plus the core/autotune.py cache schema (a drift there would silently
@@ -51,12 +60,13 @@ check-bench:
 	PYTHONPATH=src $(PY) -m pytest -q tests/test_benchmarks.py -k artifact_schema
 
 # Mirrors the CI lint job (requires ruff: pip install -e .[lint]).  Format
-# enforcement covers the kernel + sharding subsystems, the pipeline module
-# and the autotuner; the rest of src/ converges module by module as PRs
-# touch it.
+# enforcement covers the kernel + sharding subsystems, the serving tier,
+# the pipeline module and the autotuner; the rest of src/ converges module
+# by module as PRs touch it.
 lint:
 	ruff check src tests benchmarks
 	ruff format --check src/repro/kernels src/repro/sharding \
+		src/repro/serving \
 		src/repro/core/pipeline.py src/repro/core/autotune.py \
 		src/repro/core/entropy.py
 
@@ -76,6 +86,20 @@ bench-ratio:
 # host mesh (the script sets XLA_FLAGS itself, before importing jax).
 bench-sharded:
 	PYTHONPATH=src:. $(PY) benchmarks/sharded_batch.py --devices 8
+
+# Paged-KV capacity-tier sweep: decode throughput vs resident-block budget,
+# with per-budget exactness asserted against the dense-cache engine.  Writes
+# the tracked BENCH_kv.json at the repo root.
+bench-kv:
+	PYTHONPATH=src:. $(PY) benchmarks/kv_paging.py
+
+# Tiny-size smoke of the paging sweep: real capacity pressure (budget 4 of
+# an 8-block working set) but a dozen tokens, so it finishes in seconds.
+# JSON to /tmp so the tracked BENCH_kv.json perf record isn't clobbered.
+bench-kv-smoke:
+	PYTHONPATH=src:. $(PY) benchmarks/kv_paging.py \
+		--batch 2 --max-len 32 --prompt-tokens 4 --new-tokens 12 \
+		--block-tokens 8 --out-json /tmp/BENCH_kv.smoke.json
 
 bench-sharded-smoke:
 	PYTHONPATH=src:. $(PY) benchmarks/sharded_batch.py --devices 8 \

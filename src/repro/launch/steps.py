@@ -188,6 +188,14 @@ def decode_step(params, caches, batch, *, cfg):
     return next_tok, caches
 
 
+def paged_decode_step(params, paged, batch, *, cfg):
+    logits, paged = transformer.decode_step_paged(
+        params, cfg, paged, batch["tokens"], batch["pos"]
+    )
+    next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return next_tok, paged
+
+
 # ----------------------------------------------------------- jit builders
 
 
@@ -259,7 +267,8 @@ def cache_shardings(cfg, batch_size, mesh):
         leaf = path_leaf
         nd = leaf.ndim if hasattr(leaf, "ndim") else len(leaf.shape)
         if nd >= 3:  # (B, T, heads-ish, ...) or (B, H, N, P)
-            return NamedSharding(mesh, P(*(list(b0) + [None, "model"] + [None] * (nd - 3))))
+            spec = list(b0) + [None, "model"] + [None] * (nd - 3)
+            return NamedSharding(mesh, P(*spec))
         if nd >= 1:
             return NamedSharding(mesh, P(*([None] * nd)))
         return NamedSharding(mesh, P())
@@ -287,6 +296,43 @@ def make_decode_step(cfg, mesh, shape):
         donate_argnums=(1,),
     )
     return jfn, p_sh, cache_sh, b_sh
+
+
+def make_paged_decode_step(cfg, mesh, shape, *, block_tokens,
+                           pool_blocks=None):
+    """Compiled twin of decode over the paged (block-table) KV cache.
+
+    The physical pool shards its KV-head axis on "model" (same head split as
+    the dense cache); block tables are tiny int32 host-authored state and
+    stay replicated.  Paged state is donated so the pool updates in place.
+    """
+    _set_mesh_context(mesh)
+    b = shape.global_batch
+    ab = model_lib.abstract_paged_cache(
+        cfg, b, shape.seq_len, block_tokens=block_tokens,
+        pool_blocks=pool_blocks,
+    )
+    pool_sh = NamedSharding(mesh, P(None, None, "model", None))
+    repl = NamedSharding(mesh, P())
+    paged_sh = {
+        "pool": {"k": pool_sh, "v": pool_sh},
+        "tables": repl,
+        "extra": jax.tree.map(lambda _: repl, ab["extra"]),
+    }
+    p_sh = rules.params_shardings(model_lib.param_axes(cfg), mesh)
+    bs = rules.batch_spec(mesh, b)
+    b_sh = {
+        "tokens": NamedSharding(mesh, bs),
+        "pos": NamedSharding(mesh, P()),
+    }
+    fn = functools.partial(paged_decode_step, cfg=cfg)
+    jfn = jax.jit(
+        fn,
+        in_shardings=(p_sh, paged_sh, b_sh),
+        out_shardings=(b_sh["tokens"], paged_sh),
+        donate_argnums=(1,),
+    )
+    return jfn, p_sh, paged_sh, b_sh
 
 
 def make_prefill_step(cfg, mesh, shape, unroll=False):

@@ -139,13 +139,13 @@ def _dequantize_kv(codes, scale, dtype):
     return (codes.astype(jnp.float32) * scale[..., None]).astype(dtype)
 
 
-def attention_decode(params, cfg, cache, x, pos, is_global=True):
-    """Single-token decode with (ring-buffered, for SWA) KV cache.
+def _decode_qkv(params, cfg, x, pos):
+    """Shared decode-side projections: q/k/v with qk-norm + rope applied.
 
-    x: (B, 1, d); pos: scalar int32 (current absolute position).
+    k comes back post-rope — both the dense and the paged cache store it
+    that way, so a restored block never needs re-roping.
     """
     b = x.shape[0]
-    cache_len = cache["k"].shape[1]
     q = jnp.einsum("btd,dhk->bthk", x, params["wq"])
     k = jnp.einsum("btd,dhk->bthk", x, params["wk"])
     v = jnp.einsum("btd,dhk->bthk", x, params["wv"])
@@ -154,7 +154,37 @@ def attention_decode(params, cfg, cache, x, pos, is_global=True):
         k = common.qk_head_norm(k, cfg.norm_eps)
     posv = jnp.full((b, 1), pos, jnp.int32)
     q = common.apply_rope(q, posv, cfg.rope_theta)
-    k = common.apply_rope(k, posv, cfg.rope_theta)  # stored post-rope
+    k = common.apply_rope(k, posv, cfg.rope_theta)
+    return q, k, v
+
+
+def _decode_attend(q, ck, cv, keep, out_dtype):
+    """GQA single-token attention over a gathered cache view.
+
+    q: (B,1,H,dh); ck/cv: (B,S,KV,dh); keep broadcasts against the
+    (B,KV,G,S) score tensor.  Masked slots hit NEG_INF before the softmax,
+    so their probability underflows to exactly 0.0 — whatever bytes sit in
+    an unmapped cache slot contribute exactly nothing to the output.
+    """
+    b, _, h, dh = q.shape
+    kvh = ck.shape[2]
+    group = h // kvh
+    qg = q.reshape(b, kvh, group, dh)
+    scores = jnp.einsum(
+        "bkgd,bskd->bkgs", qg, ck, preferred_element_type=jnp.float32
+    ) * (dh ** -0.5)
+    scores = jnp.where(keep, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(out_dtype)
+    return jnp.einsum("bkgs,bskd->bkgd", probs, cv).reshape(b, 1, h, dh)
+
+
+def attention_decode(params, cfg, cache, x, pos, is_global=True):
+    """Single-token decode with (ring-buffered, for SWA) KV cache.
+
+    x: (B, 1, d); pos: scalar int32 (current absolute position).
+    """
+    cache_len = cache["k"].shape[1]
+    q, k, v = _decode_qkv(params, cfg, x, pos)  # k stored post-rope
 
     slot = pos % cache_len  # ring buffer (identity when cache covers all pos)
     new_cache = {}
@@ -179,21 +209,67 @@ def attention_decode(params, cfg, cache, x, pos, is_global=True):
     )
     new_cache["slot_pos"] = spos
 
-    h, kvh, dh = q.shape[2], ck.shape[2], q.shape[3]
-    group = h // kvh
-    qg = q.reshape(b, kvh, group, dh)
-    scores = jnp.einsum(
-        "bkgd,bskd->bkgs", qg, ck, preferred_element_type=jnp.float32
-    ) * (dh ** -0.5)
     valid = (spos >= 0) & (spos <= pos)
     if cfg.sliding_window:
         in_win = (pos - spos) < cfg.sliding_window
         valid = valid & (is_global | in_win)
-    scores = jnp.where(valid[None, None, None], scores, NEG_INF)
-    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
-    out = jnp.einsum("bkgs,bskd->bkgd", probs, cv).reshape(b, 1, h, dh)
+    out = _decode_attend(q, ck, cv, valid[None, None, None], x.dtype)
     y = jnp.einsum("bthk,hkd->btd", out, params["wo"])
     return y, new_cache
+
+
+# --------------------------------------------------------------- paged GQA
+
+
+def init_paged_kv_pool(cfg, pool_blocks, block_tokens, dtype):
+    """Physical KV block pool shared by every layer and sequence.
+
+    Slots are (block_tokens, KV, dh) tiles addressed by per-(layer, seq)
+    block tables; a slot's contents are garbage until a table maps it.
+    """
+    if cfg.kv_quant:
+        raise NotImplementedError(
+            "paged KV does not support kv_quant (int8 cache); "
+            "use the dense cache or disable kv_quant"
+        )
+    kv = cfg.padded_kv_heads
+    return {
+        "k": jnp.zeros((pool_blocks, block_tokens, kv, cfg.hd), dtype),
+        "v": jnp.zeros((pool_blocks, block_tokens, kv, cfg.hd), dtype),
+    }
+
+
+def paged_attention_decode(params, cfg, pool, table, x, pos, is_global=True):
+    """Single-token decode reading K/V through a block table.
+
+    pool: {"k","v"} of (P, block_tokens, KV, dh); table: (B, n_logical)
+    int32 physical slot ids, -1 = unmapped.  The block holding ``pos`` must
+    be mapped (the host allocator guarantees it).  Writes the new token into
+    its slot, then attends over the gathered logical view; unmapped or
+    future slots mask to exactly zero probability, so stale pool contents
+    never reach the output (decode_attend masks pre-softmax at NEG_INF).
+    """
+    b = x.shape[0]
+    bt = pool["k"].shape[1]
+    n_logical = table.shape[1]
+    kvh, dh = pool["k"].shape[2], pool["k"].shape[3]
+    q, k, v = _decode_qkv(params, cfg, x, pos)  # k stored post-rope
+
+    phys = table[jnp.arange(b), pos // bt]
+    kp = pool["k"].at[phys, pos % bt].set(k[:, 0])
+    vp = pool["v"].at[phys, pos % bt].set(v[:, 0])
+
+    safe = jnp.maximum(table, 0)  # gather through slot 0 for unmapped rows
+    ck = kp[safe].reshape(b, n_logical * bt, kvh, dh)
+    cv = vp[safe].reshape(b, n_logical * bt, kvh, dh)
+    t_idx = jnp.arange(n_logical * bt)  # logical slot index == position
+    valid = jnp.repeat(table >= 0, bt, axis=1) & (t_idx <= pos)[None]
+    if cfg.sliding_window:
+        in_win = (pos - t_idx) < cfg.sliding_window
+        valid = valid & (is_global | in_win[None])
+    out = _decode_attend(q, ck, cv, valid[:, None, None, :], x.dtype)
+    y = jnp.einsum("bthk,hkd->btd", out, params["wo"])
+    return y, {"k": kp, "v": vp}
 
 
 # --------------------------------------------------------------------- MLA

@@ -58,6 +58,16 @@ def abstract_cache(cfg: ModelConfig, batch: int, seq_len: int):
     )
 
 
+def abstract_paged_cache(cfg: ModelConfig, batch: int, seq_len: int, *,
+                         block_tokens: int, pool_blocks=None):
+    return jax.eval_shape(
+        lambda: transformer.init_paged_cache(
+            cfg, batch, seq_len, block_tokens=block_tokens,
+            pool_blocks=pool_blocks,
+        )
+    )
+
+
 def uses_embedding_frontend(cfg: ModelConfig) -> bool:
     return cfg.frontend in ("audio_stub", "vision_stub")
 

@@ -245,49 +245,170 @@ def init_cache(cfg, batch, seq_len):
     return caches
 
 
+def layer_is_global(cfg, i) -> bool:
+    return (not cfg.sliding_window) or (i in cfg.global_attn_layers)
+
+
+def decode_embed(params, cfg, tokens):
+    """Decode-step embedding.  tokens: (B,) int32 -> (B, 1, d)."""
+    x = embed_tokens(params, cfg, tokens[:, None])
+    return x.astype(common.dtype_of(cfg))
+
+
+def _decode_tail(lp, cfg, x):
+    """Shared FFN residual of one decode layer."""
+    if cfg.moe is not None:
+        hh = common.rms_norm(x, lp["ln2"], cfg.norm_eps)
+        out, _ = mlp.moe_apply(lp["moe"], cfg, hh)
+        return x + out
+    if cfg.d_ff > 0:
+        hh = common.rms_norm(x, lp["ln2"], cfg.norm_eps)
+        return x + mlp.swiglu(lp["mlp"], hh)
+    return x
+
+
+def decode_layer(lp, cfg, c, x, pos, is_global):
+    """One layer of decode_step.  Returns (x', new layer cache).
+
+    The serving engine jits this per layer (layer-streaming paging);
+    decode_step runs the identical python body under one jit.
+    """
+    h = common.rms_norm(x, lp["ln1"], cfg.norm_eps)
+    nc = {}
+    if cfg.mixer == "attention":
+        out, nc["attn"] = attention.attention_decode(
+            lp["attn"], cfg, c["attn"], h, pos, is_global
+        )
+    elif cfg.mixer == "mla":
+        out, nc["mla"] = attention.mla_decode(lp["mla"], cfg, c["mla"], h,
+                                              pos)
+    elif cfg.mixer == "ssm":
+        out, nc["ssm"] = ssm.ssm_decode(lp["ssm"], cfg, c["ssm"], h)
+    elif cfg.mixer == "hybrid":
+        a_out, nc["attn"] = attention.attention_decode(
+            lp["attn"], cfg, c["attn"], h, pos, is_global
+        )
+        s_out, nc["ssm"] = ssm.ssm_decode(lp["ssm"], cfg, c["ssm"], h)
+        out = 0.5 * (
+            common.rms_norm(a_out, lp["ln_ab"], cfg.norm_eps)
+            + common.rms_norm(s_out, lp["ln_sb"], cfg.norm_eps)
+        )
+    x = x + out
+    return _decode_tail(lp, cfg, x), nc
+
+
+def decode_finish(params, cfg, x):
+    """Final norm + unembed of a decode step -> (B, V) logits."""
+    h = common.rms_norm(x, params["ln_f"], cfg.norm_eps)
+    return unembed(params, cfg, h)[:, 0]
+
+
 def decode_step(params, cfg, caches, tokens, pos):
     """One decode step.  tokens: (B,) int32; pos: scalar int32 position.
 
     Returns (logits (B, V), new_caches).
     """
-    x = embed_tokens(params, cfg, tokens[:, None])
-    x = x.astype(common.dtype_of(cfg))
+    x = decode_embed(params, cfg, tokens)
     new_caches = []
     for i in range(cfg.num_layers):
         lp = _layer_slice(params, i)
-        is_global = (not cfg.sliding_window) or (i in cfg.global_attn_layers)
-        h = common.rms_norm(x, lp["ln1"], cfg.norm_eps)
-        c = caches[i]
-        nc = {}
-        if cfg.mixer == "attention":
-            out, nc["attn"] = attention.attention_decode(
-                lp["attn"], cfg, c["attn"], h, pos, is_global
-            )
-        elif cfg.mixer == "mla":
-            out, nc["mla"] = attention.mla_decode(lp["mla"], cfg, c["mla"], h,
-                                                  pos)
-        elif cfg.mixer == "ssm":
-            out, nc["ssm"] = ssm.ssm_decode(lp["ssm"], cfg, c["ssm"], h)
-        elif cfg.mixer == "hybrid":
-            a_out, nc["attn"] = attention.attention_decode(
-                lp["attn"], cfg, c["attn"], h, pos, is_global
-            )
-            s_out, nc["ssm"] = ssm.ssm_decode(lp["ssm"], cfg, c["ssm"], h)
-            out = 0.5 * (
-                common.rms_norm(a_out, lp["ln_ab"], cfg.norm_eps)
-                + common.rms_norm(s_out, lp["ln_sb"], cfg.norm_eps)
-            )
-        x = x + out
-        if cfg.moe is not None:
-            hh = common.rms_norm(x, lp["ln2"], cfg.norm_eps)
-            out, _ = mlp.moe_apply(lp["moe"], cfg, hh)
-            x = x + out
-        elif cfg.d_ff > 0:
-            hh = common.rms_norm(x, lp["ln2"], cfg.norm_eps)
-            x = x + mlp.swiglu(lp["mlp"], hh)
+        x, nc = decode_layer(lp, cfg, caches[i], x, pos, layer_is_global(cfg, i))
         new_caches.append(nc)
-    h = common.rms_norm(x, params["ln_f"], cfg.norm_eps)
-    return unembed(params, cfg, h)[:, 0], new_caches
+    return decode_finish(params, cfg, x), new_caches
+
+
+# ------------------------------------------------------------- paged decode
+
+
+def init_paged_cache(cfg, batch, seq_len, *, block_tokens, pool_blocks=None,
+                     map_all=True):
+    """Paged decode state: one shared physical KV pool + per-layer tables.
+
+    Returns {"pool": {"k","v"} (P, block_tokens, KV, dh),
+             "tables": (L, B, n_logical) int32 (-1 = unmapped),
+             "extra": per-layer list of non-paged state (ssm)}.
+
+    map_all=True builds identity tables (every logical block resident) —
+    the drop-in dense-cache replacement.  map_all=False starts fully
+    unmapped; a host-side allocator (serving/paging.py) assigns slots.
+    """
+    if cfg.mixer not in ("attention", "hybrid"):
+        raise NotImplementedError(
+            f"paged KV supports attention/hybrid mixers, not {cfg.mixer!r} "
+            "(MLA latent-cache paging is a ROADMAP follow-up)"
+        )
+    if seq_len % block_tokens:
+        raise ValueError(
+            f"seq_len={seq_len} not a multiple of block_tokens={block_tokens}"
+        )
+    n_logical = seq_len // block_tokens
+    total = cfg.num_layers * batch * n_logical
+    if pool_blocks is None:
+        pool_blocks = total
+    dt = common.dtype_of(cfg)
+    pool = attention.init_paged_kv_pool(cfg, pool_blocks, block_tokens, dt)
+    if map_all:
+        if pool_blocks < total:
+            raise ValueError(
+                f"map_all needs pool_blocks >= {total}, got {pool_blocks}"
+            )
+        tables = jnp.arange(total, dtype=jnp.int32).reshape(
+            cfg.num_layers, batch, n_logical
+        )
+    else:
+        tables = jnp.full((cfg.num_layers, batch, n_logical), -1, jnp.int32)
+    extra = []
+    for _ in range(cfg.num_layers):
+        e = {}
+        if cfg.mixer == "hybrid":
+            e["ssm"] = ssm.init_ssm_cache(cfg, batch, dt)
+        extra.append(e)
+    return {"pool": pool, "tables": tables, "extra": extra}
+
+
+def decode_layer_paged(lp, cfg, pool, table, extra, x, pos, is_global):
+    """Paged twin of decode_layer.  Returns (x', pool', extra')."""
+    h = common.rms_norm(x, lp["ln1"], cfg.norm_eps)
+    ne = {}
+    if cfg.mixer == "attention":
+        out, pool = attention.paged_attention_decode(
+            lp["attn"], cfg, pool, table, h, pos, is_global
+        )
+    elif cfg.mixer == "hybrid":
+        a_out, pool = attention.paged_attention_decode(
+            lp["attn"], cfg, pool, table, h, pos, is_global
+        )
+        s_out, ne["ssm"] = ssm.ssm_decode(lp["ssm"], cfg, extra["ssm"], h)
+        out = 0.5 * (
+            common.rms_norm(a_out, lp["ln_ab"], cfg.norm_eps)
+            + common.rms_norm(s_out, lp["ln_sb"], cfg.norm_eps)
+        )
+    else:
+        raise NotImplementedError(cfg.mixer)
+    x = x + out
+    return _decode_tail(lp, cfg, x), pool, ne
+
+
+def decode_step_paged(params, cfg, paged, tokens, pos):
+    """One decode step over the paged cache (single-graph twin).
+
+    paged: init_paged_cache state.  Tables pass through unchanged — slot
+    assignment is host-side; in-graph work is scatter (new token) + gather
+    (attention reads) against the shared pool.
+    """
+    x = decode_embed(params, cfg, tokens)
+    pool = paged["pool"]
+    new_extra = []
+    for i in range(cfg.num_layers):
+        lp = _layer_slice(params, i)
+        x, pool, ne = decode_layer_paged(
+            lp, cfg, pool, paged["tables"][i], paged["extra"][i], x, pos,
+            layer_is_global(cfg, i),
+        )
+        new_extra.append(ne)
+    logits = decode_finish(params, cfg, x)
+    return logits, {"pool": pool, "tables": paged["tables"],
+                    "extra": new_extra}
 
 
 def prefill(params, cfg, tokens=None, embeds=None, unroll=False,

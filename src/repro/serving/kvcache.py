@@ -13,7 +13,6 @@ eviction round in ONE jitted dispatch (``lzss.compress_many``) instead of one
 from __future__ import annotations
 
 import dataclasses
-import time
 
 import numpy as np
 
@@ -35,6 +34,8 @@ class BlockStats:
     evicted_bytes_raw: int = 0
     evicted_bytes_stored: int = 0
     eviction_dispatches: int = 0    # jitted compression calls issued
+    restore_dispatches: int = 0     # jitted decompression calls issued
+                                    # (raw-codec blocks restore with zero)
 
     @property
     def eviction_ratio(self) -> float:
@@ -134,23 +135,34 @@ class KVBlockStore:
         popped = [self._store.pop(k) for k in keys]
         self.stats.restores += len(keys)
         out = [None] * len(keys)
-        groups: dict = {}  # container geometry -> block indices
+        groups: dict = {}  # container geometry + codec id -> block indices
         for i, (codec, _, blob) in enumerate(popped):
             if codec == "gpulz":
                 h = lzss.fmt.parse_header(blob)
-                key = (h.symbol_size, h.chunk_symbols, h.n_chunks)
+                # version + entropy-method byte are part of the batching key:
+                # a store holding both raw-method and deflate-full blobs
+                # (kv_backend changed between rounds) must not land a
+                # mixed-method batch in one decompress_many call
+                key = (h.version, h.method, h.symbol_size, h.chunk_symbols,
+                       h.n_chunks)
                 groups.setdefault(key, []).append(i)
         # an explicitly non-sharded decoder + mesh means compress-side
         # sharding only: restore single-device rather than conflicting
         sharded = self.config.decoder in ("auto", "sharded")
-        for idxs in groups.values():
+        for gkey, idxs in groups.items():
+            decoder = self.config.decoder
+            if decoder == "deflate-full" and gkey[1] != lzss.fmt.METHOD_HUFFMAN:
+                # method-1-only decoder, raw-method group (kv_backend
+                # changed between eviction rounds): fall back per group
+                decoder = "auto"
             raws = lzss.decompress_many(
-                [popped[i][2] for i in idxs], decoder=self.config.decoder,
+                [popped[i][2] for i in idxs], decoder=decoder,
                 mesh=self.config.mesh if sharded else None,
                 batch_axis=self.config.batch_axis if sharded else None,
                 # the config's geometry pin applies to BOTH directions
                 chunks_per_block=self.config.chunks_per_block,
             )
+            self.stats.restore_dispatches += 1
             for i, raw in zip(idxs, raws):
                 out[i] = self._reassemble(popped[i][1], raw)
         for i, (codec, meta, payload) in enumerate(popped):
@@ -163,6 +175,13 @@ class KVBlockStore:
     def restore(self, key) -> np.ndarray:
         return self.restore_many([key])[0]
 
+    def discard(self, key) -> None:
+        """Drop a stored block without restoring it (stale generation)."""
+        self._store.pop(key, None)
+
+    def keys(self):
+        return list(self._store.keys())
+
     def __contains__(self, key):
         return key in self._store
 
@@ -171,16 +190,27 @@ class KVBlockStore:
 
 
 class PagedKVTracker:
-    """Block-granular access tracking -> eviction candidates (LRU)."""
+    """Block-granular access tracking -> eviction candidates (LRU).
+
+    Recency is a monotonic *logical* access counter, not a wall clock:
+    eviction order is a pure function of the access sequence, so tests can
+    pin candidate order and same-round ties break by touch order instead of
+    timer resolution.
+    """
 
     def __init__(self, block_tokens: int = 256, budget_blocks: int = 1024):
         self.block_tokens = block_tokens
         self.budget = budget_blocks
         self._last_access: dict = {}
+        self._clock = 0
+
+    def touch_block(self, key) -> None:
+        """Mark one (opaque) block key as just-accessed."""
+        self._clock += 1
+        self._last_access[key] = self._clock
 
     def touch(self, seq_id: int, pos: int):
-        blk = pos // self.block_tokens
-        self._last_access[(seq_id, blk)] = time.monotonic()
+        self.touch_block((seq_id, pos // self.block_tokens))
 
     def eviction_candidates(self):
         if len(self._last_access) <= self.budget:
@@ -188,6 +218,19 @@ class PagedKVTracker:
         n = len(self._last_access) - self.budget
         items = sorted(self._last_access.items(), key=lambda kv: kv[1])
         return [k for k, _ in items[:n]]
+
+    def candidates(self, n: int, protected=()):
+        """The n least-recently-used tracked keys outside ``protected``."""
+        protected = set(protected)
+        items = sorted(self._last_access.items(), key=lambda kv: kv[1])
+        out = []
+        for k, _ in items:
+            if k in protected:
+                continue
+            out.append(k)
+            if len(out) == n:
+                break
+        return out
 
     def drop(self, key):
         self._last_access.pop(key, None)

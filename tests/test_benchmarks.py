@@ -30,6 +30,11 @@ REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
 # repo root is a smoke artifact that escaped /tmp.
 MIN_TRACKED_SWEEP_NBYTES = 1 << 16
 
+# Same idea for the paged-KV sweep: the tracked BENCH_kv.json decodes a
+# real horizon; bench-kv-smoke runs a dozen tokens and points at /tmp.
+MIN_TRACKED_KV_NEW_TOKENS = 32
+MIN_TRACKED_KV_BATCH = 4
+
 
 def _tiny_corpus(nbytes=4096):
     rng = np.random.default_rng(0)
@@ -175,6 +180,57 @@ def test_bench_ratio_artifact_schema():
     assert rec[fig8.ratio_key("deflate-full")] > 1, (
         "deflate-full ratio regressed to (or below) the LZSS-only baseline"
     )
+
+
+def test_bench_kv_artifact_schema():
+    rec = _tracked("BENCH_kv.json")
+    assert rec["benchmark"] == "kv_paging_sweep"
+    assert isinstance(rec["platform"], str)
+    assert isinstance(rec["interpret_mode"], bool)
+    assert rec["new_tokens"] >= MIN_TRACKED_KV_NEW_TOKENS, (
+        f"new_tokens={rec['new_tokens']} looks like a bench-kv-smoke run "
+        f"written to the repo root (smoke artifacts belong in /tmp; see "
+        f"the Makefile bench-kv-smoke target)"
+    )
+    assert rec["batch"] >= MIN_TRACKED_KV_BATCH
+    assert rec["working_set_blocks"] > rec["peak_layer_blocks"] > 0
+    assert rec["dense"]["tokens_per_s"] > 0
+    budgets = rec["budgets"]
+    assert len(budgets) >= 3, "sweep must cover several resident budgets"
+    # the sweep must include real capacity pressure (budget < working set,
+    # so eviction+restore actually ran) ...
+    tight = [e for e in budgets
+             if e["budget_blocks"] < rec["working_set_blocks"]]
+    assert tight, "no budget below the working set: paging never exercised"
+    for e in tight:
+        assert e["evictions"] > 0 and e["restores"] > 0
+        assert e["eviction_ratio"] > 0
+        # batched dispatch: rounds, not one jit call per block
+        assert e["eviction_dispatches"] <= e["evictions"]
+        assert e["restore_dispatches"] <= e["restores"]
+    # ... and every point must have stayed bit-identical to the dense cache
+    for e in budgets:
+        assert e["exact"] is True, f"budget={e['budget_blocks']} diverged"
+        assert e["tokens_per_s"] > 0
+        assert 0 < e["high_water"] <= e["budget_blocks"], (
+            f"budget={e['budget_blocks']}: allocator exceeded the budget"
+        )
+        assert e["prefetch_hits"] <= e["prefetch_issued"]
+
+
+def test_kv_paging_sweep_smoke(tmp_path):
+    kv_paging = pytest.importorskip("benchmarks.kv_paging")
+    out = tmp_path / "BENCH_kv.json"
+    rec = kv_paging.paging_sweep(
+        budgets=[4], batch=2, max_len=16, block_tokens=8, prompt_tokens=4,
+        new_tokens=6, out_json=str(out),
+    )
+    assert out.exists()
+    disk = json.loads(out.read_text())
+    assert disk["benchmark"] == rec["benchmark"] == "kv_paging_sweep"
+    (entry,) = disk["budgets"]
+    assert entry["exact"] is True
+    assert entry["evictions"] > 0  # budget 4 < working set 8: real pressure
 
 
 def test_autotune_cache_artifact_schema(tmp_path):

@@ -72,12 +72,12 @@ def test_kv_store_batched_ragged_blocks():
 
 
 def test_engine_offloads_cold_blocks():
-    """kv_offload copies LRU-cold blocks to the store in batched rounds."""
+    """kv_offload evicts LRU-cold blocks (compressed, slot freed) in
+    batched rounds and restores them on access."""
     cfg = configs.reduced_config(configs.get_config("llama3.2-1b"))
     params = model_lib.init_params(cfg, 0)
     eng = ServingEngine(cfg, params, max_len=64, kv_compress=True,
-                        kv_offload=True, block_tokens=8, budget_blocks=2,
-                        evict_every=4)
+                        kv_offload=True, block_tokens=8, budget_blocks=12)
     rng = np.random.default_rng(0)
     prompts = rng.integers(0, cfg.vocab_size, (2, 4)).astype(np.int32)
     eng.generate(prompts, max_new_tokens=40)
@@ -86,6 +86,8 @@ def test_engine_offloads_cold_blocks():
     assert s.evicted_bytes_raw > 0
     # batched: far fewer dispatches than evicted blocks
     assert s.eviction_dispatches <= s.evictions
+    # eviction is real: the allocator never exceeded the resident budget
+    assert eng.paging_stats()["high_water"] <= 12
 
 
 def test_kv_store_restore_many_missing_key_loses_nothing():

@@ -1,0 +1,313 @@
+"""Paged-KV capacity tier: block-table attention + eviction/restore.
+
+The exactness contract under test: with a resident-block budget smaller
+than the all-layers working set, generated tokens stay bit-identical to the
+dense-cache engine, device-resident physical blocks never exceed the
+budget, and evicted blocks round-trip through the GPULZ store (raw,
+deflate-full, and 8-device sharded restore configs).
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.configs.base import ShapeConfig
+from repro.launch import steps
+from repro.models import model as model_lib, transformer
+from repro.serving.engine import ServingEngine
+from repro.serving.kvcache import KVBlockStore, PagedKVTracker
+from repro.serving.paging import BlockPoolAllocator, PrefetchQueue
+
+multidevice = pytest.mark.skipif(
+    jax.device_count() < 8,
+    reason="needs 8 host devices: run via `make test-serving` "
+    "(XLA_FLAGS=--xla_force_host_platform_device_count=8)",
+)
+
+
+@pytest.fixture(scope="module")
+def llama():
+    cfg = configs.reduced_config(configs.get_config("llama3.2-1b"))
+    return cfg, model_lib.init_params(cfg, 0)
+
+
+@pytest.fixture(scope="module")
+def prompts():
+    rng = np.random.default_rng(0)
+    return rng.integers(0, 256, (2, 8)).astype(np.int32)
+
+
+@pytest.fixture(scope="module")
+def dense_tokens(llama, prompts):
+    cfg, params = llama
+    eng = ServingEngine(cfg, params, max_len=64)
+    return eng.generate(prompts, max_new_tokens=16).tokens
+
+
+# budget 8 < working set 12 (2 layers x 2 seqs x 3 blocks) but >= the
+# per-layer peak of 6: real eviction traffic with exactness preserved
+TIGHT = dict(kv_offload=True, block_tokens=8, budget_blocks=8)
+
+
+# ----------------------------------------------------------- model layers
+
+
+def test_decode_step_paged_matches_dense_fully_mapped(llama, prompts):
+    """Identity-mapped paged decode == dense decode, token for token."""
+    cfg, params = llama
+    maxlen, bt = 32, 8
+    caches = transformer.init_cache(cfg, 2, maxlen)
+    paged = transformer.init_paged_cache(cfg, 2, maxlen, block_tokens=bt)
+    jd = jax.jit(lambda p, c, t, s: transformer.decode_step(p, cfg, c, t, s))
+    jp = jax.jit(
+        lambda p, c, t, s: transformer.decode_step_paged(p, cfg, c, t, s)
+    )
+    td = tp = jnp.asarray(prompts[:, 0])
+    for pos in range(12):
+        ld, caches = jd(params, caches, td, jnp.int32(pos))
+        lp, paged = jp(params, paged, tp, jnp.int32(pos))
+        if pos + 1 < prompts.shape[1]:
+            td = tp = jnp.asarray(prompts[:, pos + 1])
+        else:
+            td = jnp.argmax(ld, axis=-1).astype(jnp.int32)
+            tp = jnp.argmax(lp, axis=-1).astype(jnp.int32)
+        np.testing.assert_array_equal(np.asarray(td), np.asarray(tp))
+
+
+def test_paged_attention_ignores_unmapped_garbage(llama):
+    """Garbage in unmapped pool slots must contribute exactly nothing."""
+    cfg, params = llama
+    maxlen, bt, b = 32, 8, 2
+    rng = np.random.default_rng(3)
+    toks = jnp.asarray(rng.integers(0, 256, (b,)).astype(np.int32))
+    clean = transformer.init_paged_cache(cfg, b, maxlen, block_tokens=bt,
+                                         pool_blocks=32)
+    dirty = {
+        "pool": {
+            k: v.at[16:].set(
+                jnp.asarray(rng.normal(size=v[16:].shape) * 100, v.dtype)
+            )
+            for k, v in clean["pool"].items()
+        },
+        "tables": clean["tables"],
+        "extra": clean["extra"],
+    }
+    l0, _ = transformer.decode_step_paged(params, cfg, clean, toks,
+                                          jnp.int32(0))
+    l1, _ = transformer.decode_step_paged(params, cfg, dirty, toks,
+                                          jnp.int32(0))
+    np.testing.assert_array_equal(np.asarray(l0), np.asarray(l1))
+
+
+def test_init_paged_cache_validation(llama):
+    cfg, _ = llama
+    with pytest.raises(ValueError):
+        transformer.init_paged_cache(cfg, 2, 30, block_tokens=8)
+    mla = dataclasses.replace(cfg, mixer="mla")
+    with pytest.raises(NotImplementedError):
+        transformer.init_paged_cache(mla, 2, 32, block_tokens=8)
+    quant = dataclasses.replace(cfg, kv_quant=True)
+    with pytest.raises(NotImplementedError):
+        transformer.init_paged_cache(quant, 2, 32, block_tokens=8)
+
+
+def test_make_paged_decode_step_twin(llama, prompts):
+    """Compiled paged twin vs compiled dense decode: identical tokens."""
+    cfg, params = llama
+    b, maxlen, bt = 2, 32, 8
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    shape = ShapeConfig("pg", maxlen, b, "decode")
+    jd, _, _, _ = steps.make_decode_step(cfg, mesh, shape)
+    jp, _, _, _ = steps.make_paged_decode_step(cfg, mesh, shape,
+                                               block_tokens=bt)
+    caches = transformer.init_cache(cfg, b, maxlen)
+    paged = transformer.init_paged_cache(cfg, b, maxlen, block_tokens=bt)
+    td = tp = jnp.asarray(prompts[:, 0])
+    for pos in range(12):
+        td, caches = jd(params, caches, {"tokens": td, "pos": jnp.int32(pos)})
+        tp, paged = jp(params, paged, {"tokens": tp, "pos": jnp.int32(pos)})
+        if pos + 1 < prompts.shape[1]:
+            td = tp = jnp.asarray(prompts[:, pos + 1])
+        np.testing.assert_array_equal(np.asarray(td), np.asarray(tp))
+
+
+# ----------------------------------------------------------------- engine
+
+
+def test_engine_paged_bit_identical_under_tight_budget(llama, prompts,
+                                                       dense_tokens):
+    cfg, params = llama
+    eng = ServingEngine(cfg, params, max_len=64, kv_compress=True, **TIGHT)
+    r = eng.generate(prompts, max_new_tokens=16)
+    np.testing.assert_array_equal(r.tokens, dense_tokens)
+    s = eng.paging_stats()
+    assert s["working_set_blocks"] > eng.budget_blocks  # budget < working set
+    assert s["high_water"] <= eng.budget_blocks  # allocator never over budget
+    assert eng.kv_store.stats.evictions > 0
+    assert eng.kv_store.stats.restores > 0
+
+
+def test_engine_paged_deflate_full_roundtrip(llama, prompts, dense_tokens):
+    """Eviction->restore through the entropy-coded v2 container."""
+    cfg, params = llama
+    eng = ServingEngine(cfg, params, max_len=64, kv_compress=True,
+                        kv_backend="deflate-full", **TIGHT)
+    r = eng.generate(prompts, max_new_tokens=16)
+    np.testing.assert_array_equal(r.tokens, dense_tokens)
+    assert eng.kv_store.stats.restores > 0
+    assert eng.kv_store.stats.restore_dispatches > 0
+
+
+def test_engine_paged_raw_codec_restore_stats(llama, prompts, dense_tokens):
+    """Raw-codec blocks restore with ZERO decompression dispatches."""
+    cfg, params = llama
+    eng = ServingEngine(cfg, params, max_len=64, kv_compress=False, **TIGHT)
+    r = eng.generate(prompts, max_new_tokens=16)
+    np.testing.assert_array_equal(r.tokens, dense_tokens)
+    s = eng.kv_store.stats
+    assert s.restores > 0
+    assert s.restore_dispatches == 0
+    assert s.eviction_dispatches == 0
+
+
+def test_engine_paged_prefetch_hits(llama, prompts, dense_tokens):
+    """Next-access-group prefetch turns demand restores into early hits."""
+    cfg, params = llama
+    on = ServingEngine(cfg, params, max_len=64, kv_compress=True, **TIGHT)
+    r = on.generate(prompts, max_new_tokens=16)
+    np.testing.assert_array_equal(r.tokens, dense_tokens)
+    s_on = on.paging_stats()
+    assert s_on["prefetch_issued"] > 0
+    assert s_on["prefetch_hits"] > 0
+
+    off = ServingEngine(cfg, params, max_len=64, kv_compress=True,
+                        kv_prefetch=False, **TIGHT)
+    r2 = off.generate(prompts, max_new_tokens=16)
+    np.testing.assert_array_equal(r2.tokens, dense_tokens)
+    s_off = off.paging_stats()
+    assert s_off["prefetch_issued"] == 0
+    assert s_off["demand_restores"] > 0
+    # prefetch serves restores ahead of the step that demands them
+    assert s_on["demand_restores"] < s_off["demand_restores"]
+
+
+def test_engine_paged_hybrid_swa(prompts):
+    """Hybrid attention+SSM with sliding window: dead blocks retire, tokens
+    still match the dense ring-buffer cache."""
+    cfg = configs.reduced_config(configs.get_config("hymba-1.5b"))
+    params = model_lib.init_params(cfg, 0)
+    dense = ServingEngine(cfg, params, max_len=64)
+    want = dense.generate(prompts, max_new_tokens=12).tokens
+    eng = ServingEngine(cfg, params, max_len=64, kv_compress=True,
+                        kv_offload=True, block_tokens=8, budget_blocks=6)
+    r = eng.generate(prompts, max_new_tokens=12)
+    np.testing.assert_array_equal(r.tokens, want)
+    assert eng.paging_stats()["high_water"] <= 6
+
+
+def test_engine_paged_budget_below_peak_raises(llama, prompts):
+    cfg, params = llama
+    eng = ServingEngine(cfg, params, max_len=64, kv_compress=True,
+                        kv_offload=True, block_tokens=8, budget_blocks=4)
+    with pytest.raises(ValueError, match="peak per-layer working set"):
+        eng.generate(prompts, max_new_tokens=16)
+
+
+def test_engine_paged_rejects_unsupported_configs(llama):
+    cfg, params = llama
+    with pytest.raises(ValueError, match="block_tokens"):
+        ServingEngine(cfg, params, max_len=60, kv_offload=True,
+                      block_tokens=8)
+    quant = dataclasses.replace(cfg, kv_quant=True)
+    with pytest.raises(NotImplementedError):
+        ServingEngine(quant, params, max_len=64, kv_offload=True,
+                      block_tokens=8)
+
+
+@multidevice
+def test_engine_paged_sharded_restore_8dev(llama, prompts, dense_tokens):
+    """kv_mesh threads the sharded dispatch pair through evict AND restore;
+    tokens stay bit-identical to the single-device dense engine."""
+    cfg, params = llama
+    mesh = jax.make_mesh((8,), ("data",))
+    eng = ServingEngine(cfg, params, max_len=64, kv_compress=True,
+                        kv_mesh=mesh, kv_batch_axis="data", **TIGHT)
+    assert eng.kv_store.config.backend == "sharded"
+    assert eng.kv_store.config.decoder == "sharded"
+    r = eng.generate(prompts, max_new_tokens=16)
+    np.testing.assert_array_equal(r.tokens, dense_tokens)
+    assert eng.kv_store.stats.restores > 0
+
+
+# ------------------------------------------------------- host-side pieces
+
+
+def test_allocator_lowest_slot_first_and_high_water():
+    a = BlockPoolAllocator(4)
+    assert [a.alloc() for _ in range(3)] == [0, 1, 2]
+    a.free(1)
+    assert a.alloc() == 1  # lowest free slot, deterministic trace
+    assert a.high_water == 3
+    a.free(0)
+    assert a.allocated == 2 and a.free_blocks == 2
+
+
+def test_allocator_exhaustion_and_double_free():
+    a = BlockPoolAllocator(2)
+    a.alloc(), a.alloc()
+    with pytest.raises(RuntimeError, match="budget=2"):
+        a.alloc()
+    a.free(0)
+    with pytest.raises(ValueError, match="double free"):
+        a.free(0)
+
+
+def test_prefetch_queue_dedups_and_drains():
+    q = PrefetchQueue()
+    q.push(("a", 1)), q.push(("b", 2)), q.push(("a", 1))
+    assert len(q) == 2
+    assert q.pop_all() == [("a", 1), ("b", 2)]
+    assert len(q) == 0
+
+
+def test_tracker_logical_counter_pins_order():
+    """Eviction order is a pure function of the access sequence: no wall
+    clock, ties impossible, candidate order fully pinned."""
+    tr = PagedKVTracker(block_tokens=4, budget_blocks=1)
+    for key in ["a", "b", "c", "d"]:
+        tr.touch_block(key)
+    tr.touch_block("a")  # a becomes most-recent
+    assert tr.eviction_candidates() == ["b", "c", "d"]
+    assert tr.candidates(2) == ["b", "c"]
+    assert tr.candidates(3, protected={"c"}) == ["b", "d", "a"]
+    assert tr.candidates(99) == ["b", "c", "d", "a"]
+
+
+# ------------------------------------------------ store batching key fix
+
+
+def test_restore_many_mixed_method_store_groups_by_method():
+    """A store holding raw-method v1 AND deflate-full v2 blobs must split
+    the restore into per-method batches instead of one mixed
+    decompress_many call (regression: PR 7 made mixing a ValueError)."""
+    store = KVBlockStore(compress=True, backend="xla")
+    rng = np.random.default_rng(7)
+    blocks = {}
+    for i in range(2):
+        blk = np.repeat(rng.integers(0, 255, 512).astype(np.uint8), 4)
+        blocks[("v1", i)] = blk
+    store.evict_many(list(blocks.items()))
+    store.config = dataclasses.replace(store.config, backend="deflate-full")
+    for i in range(2):
+        blk = np.repeat(rng.integers(0, 255, 512).astype(np.uint8), 4)
+        blocks[("v2", i)] = blk
+    store.evict_many([(k, v) for k, v in blocks.items() if k[0] == "v2"])
+    keys = list(blocks)  # interleaves both methods in one restore round
+    outs = store.restore_many(keys)
+    for k, got in zip(keys, outs):
+        np.testing.assert_array_equal(got, blocks[k])
+    assert store.stats.restore_dispatches == 2  # one per method group
