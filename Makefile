@@ -9,15 +9,17 @@
 # separate multidevice lane (8 forced host devices), test-serving +
 # bench-kv-smoke in a serving lane (also 8 forced host devices, for the
 # sharded eviction/restore tests), test-property as its own hypothesis
-# lane, and `ruff check` / `ruff format --check` as a separate lint job.
+# lane, test-lossy + bench-lossy-smoke in a lossy lane (error-bounded
+# frontend conformance), and `ruff check` / `ruff format --check` as a
+# separate lint job.
 
 PY ?= python
 
 .PHONY: test test-fast test-multidevice test-property test-serving \
-	check-bench lint \
+	test-lossy check-bench lint \
 	bench-pipeline bench-decode bench-ratio bench-sharded bench-kv \
-	bench-sharded-smoke bench-decode-smoke bench-ratio-smoke \
-	bench-kv-smoke bench-smoke bench
+	bench-lossy bench-sharded-smoke bench-decode-smoke bench-ratio-smoke \
+	bench-kv-smoke bench-lossy-smoke bench-smoke bench
 
 test:
 	PYTHONPATH=src $(PY) -m pytest -x -q
@@ -52,6 +54,18 @@ test-serving:
 	PYTHONPATH=src XLA_FLAGS=--xla_force_host_platform_device_count=8 \
 		$(PY) -m pytest -q tests/test_serving.py tests/test_serving_paged.py
 
+# Lossy lane: the error-bounded frontend (quantize -> bitshuffle -> inner
+# lossless stage) end to end — registry pair, bound conformance on the
+# adversarial corpora, golden lossy blobs, every consumer wiring (grad
+# exchange, KV tier, checkpoint groups, sharded batches), plus the
+# hypothesis bound property under the fixed-seed ci-property profile
+# (skips cleanly where hypothesis isn't installed).
+test-lossy:
+	PYTHONPATH=src HYPOTHESIS_PROFILE=ci-property $(PY) -m pytest -q \
+		tests/test_lossy.py tests/test_quant.py
+	PYTHONPATH=src HYPOTHESIS_PROFILE=ci-property $(PY) -m pytest -q \
+		tests/test_properties.py -k lossy
+
 # Schema-validate the tracked BENCH_*.json perf records (catches a smoke run
 # accidentally written to the repo root before it clobbers the trajectory)
 # plus the core/autotune.py cache schema (a drift there would silently
@@ -68,7 +82,8 @@ lint:
 	ruff format --check src/repro/kernels src/repro/sharding \
 		src/repro/serving \
 		src/repro/core/pipeline.py src/repro/core/autotune.py \
-		src/repro/core/entropy.py
+		src/repro/core/entropy.py src/repro/core/lossy.py \
+		src/repro/core/bitshuffle.py
 
 bench-pipeline:
 	PYTHONPATH=src:. $(PY) benchmarks/fig9_throughput.py --backend fused-mono
@@ -100,6 +115,20 @@ bench-kv-smoke:
 	PYTHONPATH=src:. $(PY) benchmarks/kv_paging.py \
 		--batch 2 --max-len 32 --prompt-tokens 4 --new-tokens 12 \
 		--block-tokens 8 --out-json /tmp/BENCH_kv.smoke.json
+
+# Lossy ratio/throughput-vs-bound sweep; every row asserts reconstruction
+# within its bound before the JSON is written.  Writes the tracked
+# BENCH_lossy.json at the repo root.
+bench-lossy:
+	PYTHONPATH=src:. $(PY) benchmarks/fig_lossy.py
+
+# Tiny-size smoke of the lossy sweep: the full bound axis (including the
+# bit-exact eb=0 reference row) on a small slice, bound asserted per row.
+# JSON to /tmp so the tracked BENCH_lossy.json perf record isn't clobbered.
+bench-lossy-smoke:
+	PYTHONPATH=src:. $(PY) benchmarks/fig_lossy.py \
+		--nbytes 16384 --sweep-nbytes 8192 \
+		--out-json /tmp/BENCH_lossy.smoke.json
 
 bench-sharded-smoke:
 	PYTHONPATH=src:. $(PY) benchmarks/sharded_batch.py --devices 8 \

@@ -47,15 +47,21 @@ def decoder_sweep(
 ) -> dict:
     """Time each registered decoder on the same container; write the JSON.
 
-    ``decoders=None`` sweeps every key in ``lzss.available_decoders()``.
+    ``decoders=None`` sweeps every *lossless* key in
+    ``lzss.available_decoders()`` — the method-2 ``lossy-fz`` decoder only
+    accepts lossy containers, whose geometry depends on the error bound;
+    benchmarks/fig_lossy.py times that pair across its bound sweep instead.
     Throughput is measured in *decoded* (original) bytes per second — the
     figure a restore path cares about.  A smaller slice than the headline
     numbers keeps interpret-mode runs tractable off-TPU.
     """
-    from repro.core import pipeline
+    from repro.core import format as fmt, pipeline
 
     if decoders is None:
-        decoders = tuple(lzss.available_decoders())
+        decoders = tuple(
+            d for d in lzss.available_decoders()
+            if pipeline.container_method(d) != fmt.METHOD_LOSSY
+        )
     slice_ = np.ascontiguousarray(data[:sweep_nbytes])
     res = lzss.compress(slice_, lzss.DEFAULT_CONFIG)
     # each decoder gets a container of its own method: the raw decoders time

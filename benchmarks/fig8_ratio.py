@@ -53,12 +53,20 @@ def ratio_sweep(
 ) -> dict:
     """Compress the same slice with each registered backend; write the JSON.
 
-    ``backends=None`` sweeps every key in ``lzss.available_backends()``.
-    Ratios (unlike the throughput sweeps) are platform-independent, but the
-    JSON still tags the platform for provenance.
+    ``backends=None`` sweeps every *lossless* key in
+    ``lzss.available_backends()`` — the method-2 ``lossy-fz`` pair's ratio
+    is a function of its error bound, which this sweep has no axis for
+    (benchmarks/fig_lossy.py sweeps ratio vs bound instead).  Ratios
+    (unlike the throughput sweeps) are platform-independent, but the JSON
+    still tags the platform for provenance.
     """
+    from repro.core import format as fmt, pipeline
+
     if backends is None:
-        backends = tuple(lzss.available_backends())
+        backends = tuple(
+            b for b in lzss.available_backends()
+            if pipeline.container_method(b) != fmt.METHOD_LOSSY
+        )
     slice_ = np.ascontiguousarray(data[:sweep_nbytes])
     results = {}
     for backend in backends:

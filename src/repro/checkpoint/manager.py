@@ -72,13 +72,35 @@ class CheckpointManager:
                                # any other (runtime/elastic.py re-points
                                # lz_mesh at the restore-side mesh)
     lz_batch_axis: object = None
+    lz_lossy_eb: object = None  # error-bounded lossy compression of f32
+                               # leaves (lossy-fz codec: each restored
+                               # element within eb of the saved value,
+                               # non-finite exact); every other dtype — and
+                               # all leaves when None — stays lossless.
+                               # Lossy leaves CRC the stored blob instead of
+                               # the raw bytes (the raw bytes are not
+                               # reproduced bit-exactly by design).
 
     # ------------------------------------------------------------- save
 
-    def _lz_config(self, symbol_size: int) -> "lzss.LZSSConfig":
+    def _lz_config(self, symbol_size: int, lossy: bool = False) -> "lzss.LZSSConfig":
         # "auto" backend/decoder resolve per-platform at dispatch time;
         # with a mesh they map to the shard-mapped "sharded" pair instead
         backend, decoder = self.lz_backend, self.lz_decoder
+        if lossy:
+            # configured backend becomes the lossy container's inner
+            # lossless stage (mirrors optim/grad_compress.lossy_grad_config)
+            inner = "auto" if backend in ("lossy-fz", "sharded") else backend
+            if self.lz_mesh is not None:
+                decoder = "sharded" if decoder == "auto" else decoder
+            return lzss.LZSSConfig(
+                symbol_size=4, window=self.lz_window,
+                chunk_symbols=self.lz_chunk,
+                chunks_per_block=self.lz_chunks_per_block,
+                backend="lossy-fz", decoder=decoder,
+                lossy_eb=float(self.lz_lossy_eb), lossy_inner=inner,
+                mesh=self.lz_mesh, batch_axis=self.lz_batch_axis,
+            )
         if self.lz_mesh is not None:
             backend = "sharded" if backend == "auto" else backend
             decoder = "sharded" if decoder == "auto" else decoder
@@ -115,13 +137,17 @@ class CheckpointManager:
                 "file": fname,
             })
             if self.compress and len(raw) >= 1024:
+                lossy = (
+                    self.lz_lossy_eb is not None
+                    and arr.dtype == np.float32
+                )
                 s = _symbol_size(arr.dtype)
                 nsym = -(-len(raw) // s)
                 nc = -(-nsym // self.lz_chunk)
                 # bucket by chunk count so a tiny leaf is never padded to a
                 # huge leaf's geometry inside the shared batch
                 bucket = 1 << max(0, nc - 1).bit_length()
-                groups.setdefault((s, bucket), []).append(i)
+                groups.setdefault((s, bucket, lossy), []).append(i)
             else:
                 entries[i]["codec"] = "raw"
                 entries[i]["stored_bytes"] = len(raw)
@@ -129,16 +155,22 @@ class CheckpointManager:
                 with open(os.path.join(tmp, fname + ".raw"), "wb") as f:
                     f.write(raw)
         # one batched compression dispatch per dtype-class group
-        for (s, _bucket), idxs in groups.items():
+        for (s, _bucket, lossy), idxs in groups.items():
             batch = lzss.compress_many(
                 [np.frombuffer(raws[i], np.uint8) for i in idxs],
-                self._lz_config(s),
+                self._lz_config(s, lossy=lossy),
             )
             for j, i in enumerate(idxs):
                 res = batch[j]
                 entries[i]["codec"] = "gpulz"
                 entries[i]["stored_bytes"] = res.total_bytes
                 entries[i]["file"] += ".gplz"
+                if lossy:
+                    # the restored bytes differ from `raw` by design, so the
+                    # raw CRC cannot gate restore; CRC the stored container
+                    # instead (still catches disk corruption before decode)
+                    entries[i]["lossy"] = True
+                    entries[i]["crc32"] = zlib.crc32(res.data.tobytes())
                 res.data.tofile(os.path.join(tmp, entries[i]["file"]))
         manifest["leaves"] = entries
         with open(os.path.join(tmp, "manifest.json"), "w") as f:
@@ -180,18 +212,41 @@ class CheckpointManager:
             if e["codec"] != "gpulz":
                 continue
             blob = np.fromfile(os.path.join(d, e["file"]), np.uint8)
+            if e.get("lossy") and zlib.crc32(blob.tobytes()) != e["crc32"]:
+                # lossy leaves CRC the stored container (the raw bytes are
+                # not reproduced bit-exactly); verify before decode
+                raise IOError(f"CRC mismatch for {name} at step {step}")
             h = lzss.fmt.parse_header(blob)
             blobs[name] = blob
+            # version + method byte join the batching key so a checkpoint
+            # holding both lossless and lossy-fz leaves never lands a
+            # mixed-method batch in one decompress_many call; lossy blobs
+            # additionally split on their static decode params
             geom_groups.setdefault(
-                (h.symbol_size, h.chunk_symbols, h.n_chunks), []
+                (h.version, h.method, h.symbol_size, h.chunk_symbols,
+                 h.n_chunks, h.lossy_mode, h.inner_method), []
             ).append(name)
         decompressed = {}
         # an explicitly non-sharded lz_decoder + lz_mesh means compress-side
         # sharding only: restore single-device rather than conflicting
         sharded = self.lz_decoder in ("auto", "sharded")
-        for group in geom_groups.values():
+        method_only = {
+            lzss.fmt.METHOD_HUFFMAN: "deflate-full",
+            lzss.fmt.METHOD_LOSSY: "lossy-fz",
+        }
+        for gkey, group in geom_groups.items():
+            decoder = self.lz_decoder
+            if decoder not in ("auto", "sharded") and decoder != \
+                    method_only.get(gkey[1]) and (
+                        decoder in method_only.values()
+                        or gkey[1] in method_only
+                    ):
+                # decoder/method mismatch (e.g. a raw-method decoder pinned
+                # while this group is lossy): fall back per group — the
+                # container's method byte routes to the right decoder
+                decoder = "auto"
             raws = lzss.decompress_many(
-                [blobs[n] for n in group], decoder=self.lz_decoder,
+                [blobs[n] for n in group], decoder=decoder,
                 mesh=self.lz_mesh if sharded else None,
                 batch_axis=self.lz_batch_axis if sharded else None,
                 # the pin governs restore kernels too, not just save
@@ -208,7 +263,7 @@ class CheckpointManager:
             else:
                 with open(os.path.join(d, e["file"]), "rb") as f:
                     raw = f.read()
-            if zlib.crc32(raw) != e["crc32"]:
+            if not e.get("lossy") and zlib.crc32(raw) != e["crc32"]:
                 raise IOError(f"CRC mismatch for {name} at step {step}")
             arr = np.frombuffer(raw, e["dtype"]).reshape(e["shape"])
             if sh is not None:

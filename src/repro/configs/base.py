@@ -180,6 +180,12 @@ class CompressionConfig:
     checkpoint_symbol_size: int = 4  # fp32 shards
     grad_cross_pod: bool = False     # quantize+LZSS the pod-axis grad exchange
     grad_ratio_cap: float = 2.0      # fixed buffer = quantized_size / cap
+    lossy_eb: Optional[float] = None  # error-bounded lossy GRADIENT exchange
+                                     # (optim/grad_compress.py lossy-fz path:
+                                     # max |g' - g| <= eb per element when the
+                                     # slab fits its wire budget); optimizer
+                                     # state and checkpoints stay lossless —
+                                     # None = the u16-quantize legacy path
     kv_eviction: bool = False        # compress cold KV blocks on eviction
     lz_backend: str = "auto"         # compressor backend registry key
                                      # (core/pipeline.py); "auto" = the

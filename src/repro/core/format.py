@@ -13,7 +13,8 @@ Layout (little-endian):
   16      8           orig_bytes (u64)
   24      8           payload_bytes total (u64, RAW/decoded size)
   32      8           flag_bytes total (u64, RAW/decoded size)
-  40      1           method: 0 raw LZSS sections, 1 canonical Huffman
+  40      1           method: 0 raw LZSS sections, 1 canonical Huffman,
+                      2 error-bounded lossy (quantize+bitshuffle+LZSS)
   41      1           sub_log2: gap sub-block size log2 (method 1; else 0)
   42      6           reserved
   48      4*nc        section A: per-chunk token counts (u32)
@@ -63,8 +64,32 @@ HEADER_BYTES = 48
 
 METHOD_RAW = 0  # sections C/D are raw LZSS bytes (the version-1 layout)
 METHOD_HUFFMAN = 1  # sections C/D are canonical-Huffman bitstreams
+METHOD_LOSSY = 2  # error-bounded lossy payload (core/lossy.py)
 DEFAULT_SUB_LOG2 = 9  # gap-array sub-block: one entry per 512 decoded bytes
 ENTROPY_META_FIXED = 272  # 2 x 128 B codebooks + 2 x 8 B bit counts
+SUPPORTED_METHODS = (METHOD_RAW, METHOD_HUFFMAN, METHOD_LOSSY)
+
+# method-2 (lossy-fz) fixed metadata, at ``sec_meta`` where raw section C
+# would start (the A/B tables are stored as zeros — the lossy payload has
+# no per-chunk sections; the outer geometry describes the *reconstructed*
+# f32 element stream):
+#
+#   +0   u32  error bound, f32 bit pattern (0 => lossless mode)
+#   +4   u8   mode: 0 lossless passthrough, 1 quantized
+#   +5   u8   quantization ndim (always 1: the flattened element stream)
+#   +6   u8   inner container method (0 raw LZSS, 1 deflate-full)
+#   +7   u8   reserved
+#   +8   u32  n_outliers (quantizer saturation escapes)
+#   +12  u32  inner container live bytes
+#   +16  u64  n_elems: padded f32 element capacity (n_chunks*chunk_symbols)
+#   +24  8B   reserved
+#
+# then the complete inner container (bitshuffled code stream through the
+# lossless backend) at ``sec_lossy_inner``, then ``n_outliers`` 8-byte
+# (u32 element index, u32 f32 bit pattern) pairs at ``sec_outliers``.
+LOSSY_META_FIXED = 32
+LOSSY_MODE_LOSSLESS = 0
+LOSSY_MODE_QUANT = 1
 
 
 @dataclasses.dataclass(frozen=True)
@@ -81,6 +106,14 @@ class Header:
     sub_log2: int = 0
     flag_bits: int = 0
     payload_bits: int = 0
+    # method-2 (lossy) metadata, parsed from the fixed block at sec_meta
+    lossy_eb_bits: int = 0
+    lossy_mode: int = 0
+    lossy_ndim: int = 0
+    inner_method: int = 0
+    n_outliers: int = 0
+    inner_total: int = 0
+    n_elems: int = 0
 
     @property
     def sec_a(self) -> int:
@@ -128,10 +161,23 @@ class Header:
     def sec_stream_payload(self) -> int:
         return self.sec_stream_flags + (self.flag_bits + 7) // 8
 
+    # ------------------------------------- method-2 (lossy) layout
+    @property
+    def sec_lossy_inner(self) -> int:
+        """The complete inner (lossless) container, at a static offset."""
+        return self.sec_meta + LOSSY_META_FIXED
+
+    @property
+    def sec_outliers(self) -> int:
+        """The (u32 idx, u32 f32-bits) outlier pairs, after the inner."""
+        return self.sec_lossy_inner + self.inner_total
+
     @property
     def total_bytes(self) -> int:
         if self.method == METHOD_HUFFMAN:
             return self.sec_stream_payload + (self.payload_bits + 7) // 8
+        if self.method == METHOD_LOSSY:
+            return self.sec_outliers + 8 * self.n_outliers
         return self.sec_payload + self.payload_bytes
 
 
@@ -167,6 +213,62 @@ def entropy_max_compressed_bytes(
     cb = (chunk_symbols + 7) // 8
     return max_compressed_bytes(n_bytes, symbol_size, chunk_symbols) + (
         entropy_meta_bytes(nc * cb, nc * chunk_symbols * symbol_size, sub_log2)
+    )
+
+
+# Inner-container geometry for method-2 payloads: fixed by the wire format
+# (core/lossy.py asserts its stage constants agree).  The inner container is
+# an S=2 LZSS/deflate-full container over the bitshuffled uint16 unit
+# stream; units are padded to whole bitshuffle blocks, then to whole inner
+# chunks.
+LOSSY_INNER_CHUNK_SYMBOLS = 2048
+LOSSY_BLOCK_UNITS = 512  # == core/bitshuffle.py BLOCK_UNITS
+
+
+def lossy_stream_geometry(n_chunks: int, chunk_symbols: int, mode: int):
+    """Static method-2 stream geometry implied by the outer header.
+
+    Returns ``(n_elems, units_pad, inner_n_chunks)``: the padded f32
+    element capacity, the bitshuffled uint16 unit count (quant mode codes
+    one unit per element; lossless mode stores both halves), and the inner
+    container's chunk count.
+    """
+    n_elems = n_chunks * chunk_symbols
+    units = n_elems if mode == LOSSY_MODE_QUANT else 2 * n_elems
+    units_pad = -(-units // LOSSY_BLOCK_UNITS) * LOSSY_BLOCK_UNITS
+    inner_nc = max(1, -(-units_pad // LOSSY_INNER_CHUNK_SYMBOLS))
+    return n_elems, units_pad, inner_nc
+
+
+def lossy_inner_capacity(inner_nc: int, inner_method: int) -> int:
+    """Worst-case byte capacity of a method-2 payload's inner container."""
+    nbytes = inner_nc * LOSSY_INNER_CHUNK_SYMBOLS * 2
+    if inner_method == METHOD_HUFFMAN:
+        return entropy_max_compressed_bytes(
+            nbytes, 2, LOSSY_INNER_CHUNK_SYMBOLS
+        )
+    return max_compressed_bytes(nbytes, 2, LOSSY_INNER_CHUNK_SYMBOLS)
+
+
+def lossy_max_compressed_bytes(n_bytes: int, chunk_symbols: int) -> int:
+    """Worst-case method-2 container size for ``n_bytes`` of f32 input.
+
+    Upper-bounds both modes: the lossless-mode inner stream (two units per
+    element, entropy metadata included — a superset of the quant-mode inner
+    capacity) plus the quant-mode worst case of every element escaping as
+    an 8-byte outlier pair.
+    """
+    n_elems = -(-n_bytes // 4)
+    nc = max(1, -(-n_elems // chunk_symbols))
+    cap_elems, _, inner_nc = lossy_stream_geometry(
+        nc, chunk_symbols, LOSSY_MODE_LOSSLESS
+    )
+    return (
+        HEADER_BYTES
+        + 8 * nc
+        + LOSSY_META_FIXED
+        + lossy_inner_capacity(inner_nc, METHOD_HUFFMAN)
+        + 8 * cap_elems
     )
 
 
@@ -246,10 +348,10 @@ def parse_header(blob: np.ndarray) -> Header:
     # version 1 predates the method byte: bytes 40-47 were reserved zeros
     method = int(blob[40]) if version >= 2 else METHOD_RAW
     sub_log2 = int(blob[41]) if version >= 2 else 0
-    if method not in (METHOD_RAW, METHOD_HUFFMAN):
+    if method not in SUPPORTED_METHODS:
         raise ValueError(
-            f"corrupted container: method {method} not in "
-            f"({METHOD_RAW}, {METHOD_HUFFMAN})"
+            f"corrupted container: method byte {method} not in "
+            f"{SUPPORTED_METHODS}"
         )
     h = Header(
         symbol_size=int(blob[5]),
@@ -274,6 +376,24 @@ def parse_header(blob: np.ndarray) -> Header:
             h,
             flag_bits=u(h.sec_meta + 256, 8),
             payload_bits=u(h.sec_meta + 264, 8),
+        )
+    if method == METHOD_LOSSY:
+        need = h.sec_meta + LOSSY_META_FIXED
+        if blob.size < need:
+            raise ValueError(
+                f"truncated container: method-2 metadata ends at byte {need} "
+                f"but only {blob.size} bytes are present"
+            )
+        m = h.sec_meta
+        h = dataclasses.replace(
+            h,
+            lossy_eb_bits=u(m, 4),
+            lossy_mode=int(blob[m + 4]),
+            lossy_ndim=int(blob[m + 5]),
+            inner_method=int(blob[m + 6]),
+            n_outliers=u(m + 8, 4),
+            inner_total=u(m + 12, 4),
+            n_elems=u(m + 16, 8),
         )
     return h
 
@@ -377,6 +497,8 @@ def validate_container(blob: np.ndarray, header: Header | None = None):
         )
     if h.method == METHOD_HUFFMAN:
         _validate_entropy_sections(blob, h)
+    if h.method == METHOD_LOSSY:
+        _validate_lossy_sections(blob, h)
     return h, n_tokens, payload_sizes
 
 
@@ -436,6 +558,91 @@ def _validate_entropy_sections(blob: np.ndarray, h: Header) -> None:
                 f"corrupted container: {name} gap array is not a monotone "
                 f"sequence of entry points below the {bits}-bit stream"
             )
+
+
+def _validate_lossy_sections(blob: np.ndarray, h: Header) -> None:
+    """Method-2 cross-checks: metadata fields, inner container, outliers.
+
+    The in-graph lossy decoder clips every access, so corrupted metadata
+    decodes to silent garbage; this raises first.  The inner container is
+    validated recursively — it is a complete container with its own header,
+    tables and (for a deflate-full inner) entropy metadata.
+    """
+    if h.symbol_size != 4:
+        raise ValueError(
+            f"corrupted container: method-2 payloads reconstruct f32 "
+            f"elements (symbol_size 4), header declares {h.symbol_size}"
+        )
+    if h.lossy_mode not in (LOSSY_MODE_LOSSLESS, LOSSY_MODE_QUANT):
+        raise ValueError(
+            f"corrupted container: lossy mode byte {h.lossy_mode} not in "
+            f"({LOSSY_MODE_LOSSLESS}, {LOSSY_MODE_QUANT})"
+        )
+    if h.lossy_ndim != 1:
+        raise ValueError(
+            f"unsupported container: lossy quantization ndim "
+            f"{h.lossy_ndim}; this reader supports only 1"
+        )
+    if h.inner_method not in (METHOD_RAW, METHOD_HUFFMAN):
+        raise ValueError(
+            f"corrupted container: lossy inner method byte "
+            f"{h.inner_method} not in ({METHOD_RAW}, {METHOD_HUFFMAN})"
+        )
+    n_elems, _, inner_nc = lossy_stream_geometry(
+        h.n_chunks, h.chunk_symbols, h.lossy_mode
+    )
+    if h.n_elems != n_elems:
+        raise ValueError(
+            f"corrupted container: lossy n_elems {h.n_elems} does not "
+            f"match the geometry-implied capacity {n_elems} "
+            f"(n_chunks={h.n_chunks}, C={h.chunk_symbols})"
+        )
+    if h.lossy_mode == LOSSY_MODE_QUANT:
+        eb = np.uint32(h.lossy_eb_bits).view(np.float32)
+        if not np.isfinite(eb) or eb <= 0:
+            raise ValueError(
+                f"corrupted container: quant-mode error bound {eb} "
+                f"(bits 0x{h.lossy_eb_bits:08x}) is not a positive finite "
+                f"f32"
+            )
+        if h.n_outliers > n_elems:
+            raise ValueError(
+                f"corrupted container: {h.n_outliers} outlier pairs exceed "
+                f"the element capacity {n_elems}"
+            )
+    elif h.n_outliers:
+        raise ValueError(
+            f"corrupted container: lossless-mode payload declares "
+            f"{h.n_outliers} outlier pairs, expected 0"
+        )
+    if h.inner_total > lossy_inner_capacity(inner_nc, h.inner_method):
+        raise ValueError(
+            f"corrupted container: inner container declares "
+            f"{h.inner_total} bytes, above the worst-case capacity "
+            f"{lossy_inner_capacity(inner_nc, h.inner_method)}"
+        )
+    inner = blob[h.sec_lossy_inner : h.sec_lossy_inner + h.inner_total]
+    ih, _, _ = validate_container(inner)
+    if (
+        ih.method != h.inner_method
+        or ih.symbol_size != 2
+        or ih.chunk_symbols != LOSSY_INNER_CHUNK_SYMBOLS
+        or ih.n_chunks != inner_nc
+    ):
+        raise ValueError(
+            f"corrupted container: inner container geometry (method="
+            f"{ih.method}, S={ih.symbol_size}, C={ih.chunk_symbols}, "
+            f"nc={ih.n_chunks}) does not match the outer header "
+            f"(method={h.inner_method}, S=2, "
+            f"C={LOSSY_INNER_CHUNK_SYMBOLS}, nc={inner_nc})"
+        )
+    pairs = blob[h.sec_outliers : h.sec_outliers + 8 * h.n_outliers]
+    idx = pairs.reshape(-1, 8)[:, :4].copy().view(np.uint32).reshape(-1)
+    if idx.size and int(idx.max()) >= n_elems:
+        raise ValueError(
+            f"corrupted container: outlier index {int(idx.max())} exceeds "
+            f"the element capacity {n_elems}"
+        )
 
 
 def parse_tables_jax(blob_i32, n_chunks: int):

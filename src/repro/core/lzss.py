@@ -125,8 +125,10 @@ def decompress(blob, decoder: str = "auto", chunks_per_block=None) -> np.ndarray
     full = np.zeros(_dispatch_capacity(blob.size), np.uint8)
     full[: blob.size] = blob
     # the container's method byte routes the decode: entropy containers
-    # decode only through the entropy decoder, raw ones through any raw
-    # decoder — a mismatch is a clean ValueError, never garbage symbols
+    # decode only through the entropy decoder, lossy ones only through the
+    # lossy decoder, raw ones through any raw decoder — a mismatch is a
+    # clean ValueError, never garbage symbols
+    method_params = ()
     if h.method == fmt.METHOD_HUFFMAN:
         if decoder not in ("auto", "deflate-full"):
             raise ValueError(
@@ -134,6 +136,16 @@ def decompress(blob, decoder: str = "auto", chunks_per_block=None) -> np.ndarray
                 f"decoder='deflate-full' (or 'auto'), got {decoder!r}"
             )
         dec = "deflate-full"
+    elif h.method == fmt.METHOD_LOSSY:
+        if decoder not in ("auto", "lossy-fz"):
+            raise ValueError(
+                f"method byte {h.method} (lossy) container: decodes only "
+                f"via decoder='lossy-fz' (or 'auto'), got {decoder!r}"
+            )
+        dec = "lossy-fz"
+        # mode / inner method are trace-shape relevant: recover them from
+        # the header host-side and pin them as static decode parameters
+        method_params = get_decoder(dec).static_params(h)
     else:
         # canonicalize before the jit boundary: "auto"/aliases must share
         # the resolved key's trace cache entry, not mint their own
@@ -142,6 +154,11 @@ def decompress(blob, decoder: str = "auto", chunks_per_block=None) -> np.ndarray
             raise ValueError(
                 "decoder='deflate-full' decodes method-1 (entropy) "
                 "containers only; this container is method 0 (raw LZSS)"
+            )
+        if dec == "lossy-fz":
+            raise ValueError(
+                "decoder='lossy-fz' decodes method-2 (lossy) containers "
+                f"only; this container's method byte is {h.method}"
             )
     symbols = decompress_chunks(
         jnp.asarray(full),
@@ -158,6 +175,7 @@ def decompress(blob, decoder: str = "auto", chunks_per_block=None) -> np.ndarray
             chunk_symbols=h.chunk_symbols,
             decoder=dec,
         ),
+        method_params=method_params,
     )
     out = np.asarray(unpack_symbols(symbols.reshape(-1), h.symbol_size))
     return out[: h.orig_bytes]
@@ -288,8 +306,24 @@ def decompress_many(
                 f"decompress mismatched containers individually"
             )
     # method-byte routing, mirroring ``decompress``: entropy batches take
-    # the entropy decoder (per-shard, when a mesh shards the dispatch)
+    # the entropy decoder, lossy batches the lossy decoder (per-shard,
+    # when a mesh shards the dispatch)
     entropy_batch = h0.method == fmt.METHOD_HUFFMAN
+    lossy_batch = h0.method == fmt.METHOD_LOSSY
+    method_params = ()
+    if lossy_batch:
+        # mode / inner method are static decode parameters (trace-shape
+        # relevant), so a batched dispatch needs them homogeneous too
+        sp = get_decoder("lossy-fz").static_params
+        method_params = sp(h0)
+        for i, h in enumerate(headers[1:], start=1):
+            if sp(h) != method_params:
+                raise ValueError(
+                    f"decompress_many requires a homogeneous lossy batch; "
+                    f"buffer 0 has (mode, inner_method)={method_params} "
+                    f"but buffer {i} has {sp(h)}; "
+                    f"decompress mismatched containers individually"
+                )
     inner_decoder = None
     if mesh is not None:
         if decoder not in ("auto", "sharded"):
@@ -300,6 +334,8 @@ def decompress_many(
         decoder = "sharded"
         if entropy_batch:
             inner_decoder = "deflate-full"
+        elif lossy_batch:
+            inner_decoder = "lossy-fz"
     elif entropy_batch:
         if decoder not in ("auto", "deflate-full"):
             raise ValueError(
@@ -307,10 +343,22 @@ def decompress_many(
                 f"decoder='deflate-full' (or 'auto'), got {decoder!r}"
             )
         decoder = "deflate-full"
+    elif lossy_batch:
+        if decoder not in ("auto", "lossy-fz"):
+            raise ValueError(
+                f"method byte {h0.method} (lossy) containers: decode only "
+                f"via decoder='lossy-fz' (or 'auto'), got {decoder!r}"
+            )
+        decoder = "lossy-fz"
     elif decoder != "sharded" and resolve_decoder(decoder) == "deflate-full":
         raise ValueError(
             "decoder='deflate-full' decodes method-1 (entropy) containers "
             "only; this batch is method 0 (raw LZSS)"
+        )
+    elif decoder != "sharded" and resolve_decoder(decoder) == "lossy-fz":
+        raise ValueError(
+            "decoder='lossy-fz' decodes method-2 (lossy) containers only; "
+            f"this batch's method byte is {h0.method}"
         )
     width = _dispatch_capacity(max(b.size for b in blobs))
     stacked = np.zeros((len(blobs), width), np.uint8)
@@ -338,6 +386,7 @@ def decompress_many(
             else batch_axis  # static jit arg: must be hashable
         ),
         inner_decoder=inner_decoder,
+        method_params=method_params,
     )
     s = h0.symbol_size
     flat = np.asarray(symbols).reshape(len(blobs), -1)

@@ -140,6 +140,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import inspect
+import math
 import os
 from typing import Dict, Protocol
 
@@ -272,6 +273,8 @@ class LZSSConfig:
     decoder: str = "auto"  # registry key, see available_decoders()
     mesh: object = None  # jax.sharding.Mesh for "sharded" entries
     batch_axis: object = None  # axis name (or tuple) carrying B; None=auto
+    lossy_eb: object = None  # error bound for backend="lossy-fz" (0=lossless)
+    lossy_inner: str = "auto"  # lossless stage inside a lossy-fz container
 
     def __post_init__(self):
         if self.symbol_size not in (1, 2, 4):
@@ -314,6 +317,44 @@ class LZSSConfig:
                 "decoder='deflate-full' decodes method-1 (entropy) containers "
                 "only; pair it with backend='deflate-full'"
             )
+        # the lossy pair is likewise a container format: method-2 blobs
+        # decode only through their own decoder, and the error bound is
+        # part of the config contract, not an optional knob
+        if self.backend == "lossy-fz":
+            if self.symbol_size != 4:
+                raise ValueError(
+                    "backend='lossy-fz' quantizes f32 elements: "
+                    f"symbol_size must be 4, got {self.symbol_size}"
+                )
+            eb = self.lossy_eb
+            if eb is None or not isinstance(eb, (int, float)):
+                raise ValueError(
+                    "backend='lossy-fz' requires lossy_eb=<float error "
+                    "bound> (0.0 selects the bit-exact lossless mode)"
+                )
+            if not math.isfinite(eb) or eb < 0:
+                raise ValueError(
+                    f"lossy_eb must be a finite bound >= 0: {eb}"
+                )
+            object.__setattr__(self, "lossy_eb", float(eb))
+            inner = resolve_backend(self.lossy_inner)
+            if container_method(inner) == fmt.METHOD_LOSSY:
+                raise ValueError(
+                    f"lossy_inner={self.lossy_inner!r} is not a lossless "
+                    "stage; pick a raw or deflate-full backend"
+                )
+            if self.decoder == "auto":
+                object.__setattr__(self, "decoder", "lossy-fz")
+        elif self.lossy_eb is not None:
+            raise ValueError(
+                f"lossy_eb is only consulted by backend='lossy-fz' "
+                f"(got backend={self.backend!r})"
+            )
+        if self.decoder == "lossy-fz" and self.backend != "lossy-fz":
+            raise ValueError(
+                "decoder='lossy-fz' decodes method-2 (lossy) containers "
+                "only; pair it with backend='lossy-fz'"
+            )
         if isinstance(self.batch_axis, list):
             # jit static-arg hashability: axis collections must be tuples
             object.__setattr__(self, "batch_axis", tuple(self.batch_axis))
@@ -322,13 +363,14 @@ class LZSSConfig:
                 raise ValueError("batch_axis requires mesh=...")
             return
         if (
-            self.backend not in ("sharded", "deflate-full")
+            self.backend not in ("sharded", "deflate-full", "lossy-fz")
             and self.decoder != "sharded"
         ):
             raise ValueError(
                 "mesh=... is only consulted by the 'sharded' compressor/"
-                "decoder and the batched 'deflate-full' entropy dispatch; "
-                "set backend='sharded'/'deflate-full' and/or decoder='sharded'"
+                "decoder and the batched 'deflate-full'/'lossy-fz' "
+                "dispatches; set backend='sharded'/'deflate-full'/'lossy-fz' "
+                "and/or decoder='sharded'"
             )
         if self.batch_axis is not None:
             # single source of truth for axis validation (same check the
@@ -642,6 +684,37 @@ class EntropyBackend:
         )
 
 
+class LossyFzBackend:
+    """Error-bounded lossy container (core/lossy.py): cuSZ dual-quant ->
+    bitshuffle -> the ``cfg.lossy_inner`` lossless stage, emitted as a
+    method-2 container carrying the error bound + exact outlier pairs.
+    ``lossy_eb == 0`` selects the bit-exact lossless passthrough mode.
+    ``compress_many`` honors ``cfg.mesh`` exactly like the entropy entry."""
+
+    name = "lossy-fz"
+    container_method = fmt.METHOD_LOSSY
+
+    def kernel1(self, symbols, cfg):
+        # the inner LZSS stage is the platform pipeline; the lossy
+        # transform wraps it container-level, not kernel-level
+        return get_backend("auto").kernel1(symbols, cfg)
+
+    def compress(self, symbols, cfg, orig_bytes=None):
+        from repro.core import lossy  # lazy: lossy imports this module
+
+        return lossy.compress_lossy(symbols, cfg, orig_bytes)
+
+    def compress_many(self, symbols, cfg, orig_bytes):
+        if cfg.mesh is not None:
+            from repro.sharding import batch as shbatch  # lazy: avoid cycle
+
+            runner = shbatch.ShardedBatchRunner(cfg.mesh, cfg.batch_axis)
+            return runner.compress_many(symbols, cfg, orig_bytes)
+        return jax.vmap(lambda s_, o_: compress_chunks(s_, cfg, o_))(
+            symbols, orig_bytes
+        )
+
+
 register_backend(XlaBackend())
 register_backend(XlaScanBackend())
 register_backend(PallasMatchBackend())
@@ -650,6 +723,7 @@ register_backend(FusedDeflateBackend())
 register_backend(FusedMonoBackend())
 register_backend(ShardedCompressor())
 register_backend(EntropyBackend())
+register_backend(LossyFzBackend())
 
 
 def container_method(name: str) -> int:
@@ -904,6 +978,7 @@ class ShardedDecoder:
         mesh,
         batch_axis,
         inner_decoder=None,
+        method_params=(),
     ):
         from repro.sharding import batch as shbatch  # lazy: avoid cycle
 
@@ -917,6 +992,7 @@ class ShardedDecoder:
             n_chunks=n_chunks,
             chunks_per_block=chunks_per_block,
             decoder="auto" if inner_decoder is None else inner_decoder,
+            method_params=method_params,
         )
 
 
@@ -967,12 +1043,73 @@ class EntropyDecoder:
         )
 
 
+class LossyFzDecoder:
+    """Decoder for method-2 (lossy) containers (core/lossy.py): inner
+    lossless decode -> bit-plane untranspose -> Lorenzo reconstruction +
+    exact-outlier overlay.  Owns the whole container->symbols path via
+    ``decode_blob``; the static ``(mode, inner_method)`` pair — trace-shape
+    relevant but stored in the container — arrives through the
+    ``method_params`` pin, recovered host-side from the header by
+    ``static_params`` (see lzss.decompress)."""
+
+    name = "lossy-fz"
+    container_method = fmt.METHOD_LOSSY
+
+    def static_params(self, header):
+        from repro.core import lossy  # lazy: lossy imports this module
+
+        return lossy.static_params(header)
+
+    def decode(
+        self, flag_bytes, payload, n_tokens, *, symbol_size, chunks_per_block=None
+    ):
+        raise ValueError(
+            "lossy-fz containers (method byte 2) have no flag/payload "
+            "sections; decode them through decode_blob (lzss.decompress)"
+        )
+
+    def decode_blob(
+        self,
+        blob,
+        n_tokens,
+        payload_sizes,
+        *,
+        symbol_size,
+        chunk_symbols,
+        n_chunks,
+        chunks_per_block=None,
+        method_params=(),
+    ):
+        from repro.core import lossy  # lazy: lossy imports this module
+
+        if symbol_size != 4:
+            raise ValueError(
+                "lossy-fz containers hold f32 element streams "
+                f"(symbol_size=4); got symbol_size={symbol_size}"
+            )
+        if len(method_params) != 2:
+            raise ValueError(
+                "lossy-fz decode requires method_params=(mode, inner_method) "
+                "recovered from the container header; decode through "
+                "lzss.decompress, or pass method_params explicitly"
+            )
+        mode, inner_method = method_params
+        return lossy.decode_blob_lossy(
+            blob,
+            chunk_symbols=chunk_symbols,
+            n_chunks=n_chunks,
+            mode=mode,
+            inner_method=inner_method,
+        )
+
+
 register_decoder(XlaParallelDecoder())
 register_decoder(XlaScanDecoder())
 register_decoder(FusedDecoder())
 register_decoder(FusedMonoDecoder())
 register_decoder(ShardedDecoder())
 register_decoder(EntropyDecoder())
+register_decoder(LossyFzDecoder())
 
 
 # ------------------------------------------------------- symbol packing
@@ -1007,6 +1144,18 @@ def _geometry_kw(method, chunks_per_block) -> dict:
         p.kind is inspect.Parameter.VAR_KEYWORD for p in params.values()
     )
     return {"chunks_per_block": chunks_per_block} if accepts else {}
+
+
+def _optional_kw(method, **kv) -> dict:
+    """Forward each kwarg only if ``method`` accepts it — the general form
+    of ``_geometry_kw`` for registry hooks that predate newer pins
+    (``chunks_per_block``, ``method_params``, ...).  Runs at trace time
+    only."""
+    params = inspect.signature(method).parameters
+    var_kw = any(
+        p.kind is inspect.Parameter.VAR_KEYWORD for p in params.values()
+    )
+    return {k: v for k, v in kv.items() if var_kw or k in params}
 
 
 # ------------------------------------------------------- jittable cores
@@ -1116,6 +1265,7 @@ def _compress_via(backend, symbols, cfg, orig_bytes=None):
         "n_chunks",
         "decoder",
         "chunks_per_block",
+        "method_params",
     ),
 )
 def decompress_chunks(
@@ -1128,6 +1278,7 @@ def decompress_chunks(
     n_chunks,
     decoder="auto",
     chunks_per_block=None,
+    method_params=(),
 ):
     """Jittable core: container bytes -> (nc, C) int32 symbols.
 
@@ -1142,6 +1293,9 @@ def decompress_chunks(
     A decoder owning the whole container->symbols path (the single-launch
     ``fused-mono``) is dispatched through its ``decode_blob`` hook here —
     the split gather+decode path below never runs for it.
+    ``method_params`` carries static, trace-shape-relevant per-method
+    parameters recovered from the container header (the lossy decoder's
+    ``(mode, inner_method)``); it is forwarded only to hooks that accept it.
     """
     c, s, nc = chunk_symbols, symbol_size, n_chunks
     dec = get_decoder(decoder)
@@ -1154,7 +1308,11 @@ def decompress_chunks(
             symbol_size=s,
             chunk_symbols=c,
             n_chunks=nc,
-            **_geometry_kw(whole, chunks_per_block),
+            **_optional_kw(
+                whole,
+                chunks_per_block=chunks_per_block,
+                method_params=method_params,
+            ),
         )
     blob = blob.astype(jnp.int32)
     flag_sizes = (n_tokens + 7) // 8
@@ -1217,6 +1375,7 @@ def compress_many_chunks(symbols: jnp.ndarray, cfg: LZSSConfig, orig_bytes=None)
         "mesh",
         "batch_axis",
         "inner_decoder",
+        "method_params",
     ),
 )
 def decompress_many_chunks(
@@ -1232,6 +1391,7 @@ def decompress_many_chunks(
     mesh=None,
     batch_axis=None,
     inner_decoder=None,
+    method_params=(),
 ):
     """Batched inverse: (B, L) blobs + (B, nc) tables -> (B, nc, C) symbols.
 
@@ -1252,11 +1412,9 @@ def decompress_many_chunks(
     if many is not None:
         inner_kw = {}
         if inner_decoder is not None:
-            params = inspect.signature(many).parameters
-            if "inner_decoder" in params or any(
-                p.kind is inspect.Parameter.VAR_KEYWORD for p in params.values()
-            ):
-                inner_kw["inner_decoder"] = inner_decoder
+            inner_kw = _optional_kw(many, inner_decoder=inner_decoder)
+        if method_params:
+            inner_kw.update(_optional_kw(many, method_params=method_params))
         return many(
             blobs,
             n_tokens,
@@ -1279,6 +1437,7 @@ def decompress_many_chunks(
             n_chunks=n_chunks,
             decoder=decoder,
             chunks_per_block=chunks_per_block,
+            method_params=method_params,
         )
     )(blobs, n_tokens, payload_sizes)
 

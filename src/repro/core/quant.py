@@ -66,9 +66,15 @@ def quantize(x: jnp.ndarray, *, error_bound: float, ndim: int = 1) -> QuantResul
     # constant field => range-relative eb ~ 0) then route through the exact
     # fp32 outlier path instead of overflowing int32
     qf = jnp.round(x.astype(jnp.float32) / (2.0 * error_bound))
-    q = jnp.clip(qf, -(2.0 ** 30), 2.0 ** 30).astype(jnp.int32)
+    # NaN would cast to an unspecified int32 and poison the delta chain:
+    # pin its pre-quant to 0 and force it through the exact outlier path
+    # (the same q_ref=0 convention dequantize's chain repair uses).
+    nan = jnp.isnan(qf)
+    q = jnp.clip(jnp.where(nan, 0.0, qf), -(2.0 ** 30), 2.0 ** 30).astype(
+        jnp.int32
+    )
     delta = _lorenzo_delta(q, ndim) + CENTER
-    saturated_pre = jnp.abs(qf) >= 2.0 ** 30
+    saturated_pre = (jnp.abs(qf) >= 2.0 ** 30) | nan
     saturated = (delta < CODE_MIN) | (delta > CODE_MAX) | saturated_pre
     codes = jnp.where(saturated, CENTER, delta).astype(jnp.uint16)
     return QuantResult(
@@ -79,10 +85,43 @@ def quantize(x: jnp.ndarray, *, error_bound: float, ndim: int = 1) -> QuantResul
     )
 
 
+def _encoder_prequant(x: jnp.ndarray, error_bound: float) -> jnp.ndarray:
+    """The exact pre-quant integer quantize() computed for value x."""
+    qf = jnp.round(x.astype(jnp.float32) / (2.0 * error_bound))
+    qf = jnp.where(jnp.isnan(qf), 0.0, qf)
+    return jnp.clip(qf, -(2.0 ** 30), 2.0 ** 30).astype(jnp.int32)
+
+
 @functools.partial(jax.jit, static_argnames=("error_bound", "ndim"))
 def dequantize(codes, outlier_mask, outlier_vals, *, error_bound, ndim=1):
     delta = codes.astype(jnp.int32) - CENTER
     q = _lorenzo_undelta(delta, ndim)
+    if ndim == 1:
+        # Chain repair: an outlier stores code CENTER (delta 0) while the
+        # encoder's delta chain downstream was computed against the true
+        # (clipped) pre-quant, so the raw cumsum is shifted by a constant
+        # for every element after an outlier.  The outlier value itself
+        # pins the encoder's pre-quant exactly (q_ref below reproduces it
+        # bit-for-bit, including the NaN->0 and inf->2^30 conventions), so
+        # adding q_ref - q_raw from the *last* outlier at or before each
+        # position restores the exact chain.  int32 wraparound in the
+        # intermediate difference is harmless: it cancels on the add, and
+        # the true pre-quant magnitude is <= 2^30.
+        q_ref = _encoder_prequant(outlier_vals, error_bound)
+        n = codes.shape[-1]
+        idx = jnp.broadcast_to(
+            jnp.arange(n, dtype=jnp.int32), codes.shape
+        )
+        last = jax.lax.cummax(
+            jnp.where(outlier_mask, idx, -1), axis=codes.ndim - 1
+        )
+        adj = jnp.where(outlier_mask, q_ref - q, 0)
+        carry = jnp.take_along_axis(adj, jnp.maximum(last, 0), axis=-1)
+        q = q + jnp.where(last >= 0, carry, 0)
+    # ndim > 1: the multi-axis Lorenzo chain has no 1D segment structure to
+    # repair; outliers there still reconstruct exactly (overlay below) but
+    # non-outliers downstream of one keep the historical shifted-cumsum
+    # behavior.  The registered lossy backend always quantizes ndim=1.
     x = q.astype(jnp.float32) * (2.0 * error_bound)
     return jnp.where(outlier_mask, outlier_vals, x)
 

@@ -39,18 +39,34 @@ def _quant_codes(field: np.ndarray, rel_eb: float, ndim: int) -> np.ndarray:
     return np.asarray(q.codes)
 
 
-def hurr_quant(nbytes: int = 1 << 22, seed: int = 0) -> np.ndarray:
-    """Weather-field quant codes: smooth 2D with fronts (moderate runs)."""
-    n = nbytes // 2
+def _hurr_raw_field(n: int, seed: int = 0) -> np.ndarray:
+    """The smooth weather field both hurr surrogates derive from."""
     side = int(np.sqrt(n))
     rng = np.random.default_rng(seed)
     y, x = np.mgrid[0:side, 0:side].astype(np.float32) / side
-    field = (
+    return (
         np.sin(6 * np.pi * x) * np.cos(4 * np.pi * y) * 30
         + np.cumsum(rng.normal(0, 0.1, (side, side)).astype(np.float32),
                     axis=1)
     )
+
+
+def hurr_quant(nbytes: int = 1 << 22, seed: int = 0) -> np.ndarray:
+    """Weather-field quant codes: smooth 2D with fronts (moderate runs)."""
+    n = nbytes // 2
+    field = _hurr_raw_field(n, seed)
     return _quant_codes(field, 1e-3, 2).reshape(-1)[:n]
+
+
+def hurr_field(nbytes: int = 1 << 22, seed: int = 0) -> np.ndarray:
+    """The hurr surrogate's pre-quantization float32 field — the natural
+    input for the error-bounded lossy frontend (benchmarks/fig_lossy.py),
+    where quantization happens INSIDE the codec against a caller-chosen
+    bound instead of up front at a fixed one."""
+    n = nbytes // 4
+    field = _hurr_raw_field(n, seed).reshape(-1)
+    pad = np.zeros(max(0, n - field.size), np.float32)
+    return np.concatenate([field, pad])[:n].view(np.uint8)
 
 
 def hacc_quant(nbytes: int = 1 << 22, seed: int = 1) -> np.ndarray:
@@ -129,6 +145,7 @@ def rtm_float32(nbytes: int = 1 << 22, seed: int = 5) -> np.ndarray:
 
 DATASETS = {
     "hurr-quant": (hurr_quant, np.uint16),
+    "hurr-field": (hurr_field, np.float32),
     "hacc-quant": (hacc_quant, np.uint16),
     "nyx-quant": (nyx_quant, np.uint16),
     "tpch-int32": (tpch_int32, np.int32),

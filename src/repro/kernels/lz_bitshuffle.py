@@ -1,0 +1,102 @@
+"""Pallas bit-plane transpose kernels for the lossy-fz frontend.
+
+FZ-GPU's bitshuffle stage (PAPERS.md) as two tiled TPU kernels mirroring
+the layout fixed in core/bitshuffle.py: each 512-unit uint16 block becomes
+16 bit planes of 64 bytes (LSB plane first, unit ``8j`` in each packed
+byte's LSB).  Both directions are pure per-block permutations, so the grid
+is embarrassingly parallel: one grid step transposes ``ROWS_PER_STEP``
+independent blocks from a (nb, 512) uint16 view into a (nb, 1024) uint8
+view (and back).
+
+All arithmetic runs widened to int32 inside the kernel — the shift/mask
+lattice lowers as plain vector ops; only the final store narrows to uint8 /
+uint16.  Like the other kernels these are interpret-mode validated on CPU
+(byte-identical to core/bitshuffle.py's XLA reference by test); the
+``REPRO_BITSHUFFLE_PALLAS`` gate selects them on TPU.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+from repro.core.bitshuffle import BLOCK_BYTES, BLOCK_UNITS, PLANE_BYTES, PLANES
+
+ROWS_PER_STEP = 8
+
+
+def _shuffle_kernel(u_ref, out_ref):
+    u = u_ref[...].astype(jnp.int32)                       # (g, 512)
+    g = u.shape[0]
+    plane = lax.broadcasted_iota(jnp.int32, (g, BLOCK_UNITS, PLANES), 2)
+    bits = (u[:, :, None] >> plane) & 1
+    bits = bits.reshape(g, PLANE_BYTES, 8, PLANES)
+    weight = lax.broadcasted_iota(jnp.int32, bits.shape, 2)
+    packed = jnp.sum(bits << weight, axis=2)               # (g, 64, 16)
+    out = packed.transpose(0, 2, 1).reshape(g, BLOCK_BYTES)
+    out_ref[...] = out.astype(jnp.uint8)
+
+
+def _unshuffle_kernel(p_ref, out_ref):
+    p = p_ref[...].astype(jnp.int32)                       # (g, 1024)
+    g = p.shape[0]
+    p = p.reshape(g, PLANES, PLANE_BYTES)
+    pos = lax.broadcasted_iota(jnp.int32, (g, PLANES, PLANE_BYTES, 8), 3)
+    bits = (p[:, :, :, None] >> pos) & 1
+    bits = bits.transpose(0, 2, 3, 1)                      # (g, 64, 8, 16)
+    weight = lax.broadcasted_iota(jnp.int32, bits.shape, 3)
+    vals = jnp.sum(bits << weight, axis=3)                 # (g, 64, 8)
+    out_ref[...] = vals.reshape(g, BLOCK_UNITS).astype(jnp.uint16)
+
+
+def _pad_rows(x: jnp.ndarray, rows: int) -> tuple[jnp.ndarray, int]:
+    nb = x.shape[0]
+    padded = -(-nb // rows) * rows
+    if padded != nb:
+        x = jnp.pad(x, ((0, padded - nb), (0, 0)))
+    return x, padded
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def bitshuffle_pallas(units: jnp.ndarray, *, interpret: bool = False):
+    """(N,) uint16 -> (2N,) uint8; N % BLOCK_UNITS == 0."""
+    n = units.shape[0]
+    nb = n // BLOCK_UNITS
+    rows, padded = _pad_rows(units.reshape(nb, BLOCK_UNITS), ROWS_PER_STEP)
+    out = pl.pallas_call(
+        _shuffle_kernel,
+        grid=(padded // ROWS_PER_STEP,),
+        in_specs=[
+            pl.BlockSpec((ROWS_PER_STEP, BLOCK_UNITS), lambda i: (i, 0))
+        ],
+        out_specs=pl.BlockSpec((ROWS_PER_STEP, BLOCK_BYTES), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((padded, BLOCK_BYTES), jnp.uint8),
+        interpret=interpret,
+    )(rows)
+    return out[:nb].reshape(nb * BLOCK_BYTES)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def bitunshuffle_pallas(shuffled: jnp.ndarray, *, interpret: bool = False):
+    """(2N,) uint8 -> (N,) uint16; 2N % BLOCK_BYTES == 0."""
+    nb = shuffled.shape[0] // BLOCK_BYTES
+    rows, padded = _pad_rows(
+        shuffled.reshape(nb, BLOCK_BYTES), ROWS_PER_STEP
+    )
+    out = pl.pallas_call(
+        _unshuffle_kernel,
+        grid=(padded // ROWS_PER_STEP,),
+        in_specs=[
+            pl.BlockSpec((ROWS_PER_STEP, BLOCK_BYTES), lambda i: (i, 0))
+        ],
+        out_specs=pl.BlockSpec(
+            (ROWS_PER_STEP, BLOCK_UNITS), lambda i: (i, 0)
+        ),
+        out_shape=jax.ShapeDtypeStruct((padded, BLOCK_UNITS), jnp.uint16),
+        interpret=interpret,
+    )(rows)
+    return out[:nb].reshape(nb * BLOCK_UNITS)

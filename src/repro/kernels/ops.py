@@ -16,6 +16,7 @@ from __future__ import annotations
 import jax
 
 from repro.core import autotune
+from repro.kernels import lz_bitshuffle as _bshuf_impl
 from repro.kernels import lz_decode as _dec_impl
 from repro.kernels import lz_decode_mono as _dmono_impl
 from repro.kernels import lz_entropy as _ent_impl
@@ -213,6 +214,20 @@ def huffman_gap_decode(blob, wstarts, rems, first, count, base, order, *, sub):
         sub=sub,
         interpret=_interpret(),
     )
+
+
+def bitshuffle(units):
+    """(N,) uint16 -> (2N,) uint8 bit-plane transpose (lossy-fz frontend).
+
+    Fixed per-block geometry (512-unit blocks, 8 blocks per grid step) —
+    a pure permutation with no VMEM-budget trade-off, so the autotuner is
+    not consulted."""
+    return _bshuf_impl.bitshuffle_pallas(units, interpret=_interpret())
+
+
+def bitunshuffle(shuffled):
+    """(2N,) uint8 -> (N,) uint16 inverse bit-plane transpose."""
+    return _bshuf_impl.bitunshuffle_pallas(shuffled, interpret=_interpret())
 
 
 def lz_decode_mono(

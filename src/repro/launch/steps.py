@@ -158,6 +158,9 @@ def train_step_compressed(state, batch, *, cfg, traincfg, mesh):
         compress=traincfg.compression.grad_cross_pod,
         cfg=lz_cfg,
         ratio_cap=traincfg.compression.grad_ratio_cap,
+        # error-bounded lossy gradients (optimizer state stays lossless:
+        # adamw_update below sees only the reconstructed f32 gradients)
+        lossy_eb=traincfg.compression.lossy_eb,
     )
     new_p, new_opt, opt_metrics = adamw.adamw_update(
         state["params"], grads, state["opt"], state["step"], traincfg

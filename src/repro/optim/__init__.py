@@ -10,6 +10,7 @@ from repro.optim.grad_compress import (
     compress_leaf,
     decompress_leaf,
     dequantize_u16,
+    lossy_grad_config,
     pod_exchange_compressed,
     quantize_u16,
 )
@@ -24,6 +25,7 @@ __all__ = [
     "compress_leaf",
     "decompress_leaf",
     "dequantize_u16",
+    "lossy_grad_config",
     "pod_exchange_compressed",
     "quantize_u16",
 ]

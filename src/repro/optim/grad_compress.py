@@ -26,9 +26,11 @@ collectives require.
 
 from __future__ import annotations
 
+import dataclasses
 
 import jax
 import jax.numpy as jnp
+from jax import lax
 
 from repro.core import format as fmt, pipeline
 from repro.core.pipeline import LZSSConfig
@@ -109,6 +111,94 @@ def _compress_slabs(padded, cfg, ratio_cap):
     return payload.astype(jnp.uint8), used_lz
 
 
+def lossy_grad_config(eb: float, cfg: LZSSConfig = GRAD_LZ) -> LZSSConfig:
+    """The error-bounded gradient exchange config (``lossy-fz``, S=4).
+
+    Gradients are f32 element streams to the lossy frontend; the configured
+    ``cfg.backend`` becomes the *inner* lossless stage.  Optimizer state and
+    checkpoints never use this — they stay lossless (the lossy-gradients /
+    lossless-state split of ``CompressionConfig.lossy_eb``).
+    """
+    inner = "auto" if cfg.backend in ("lossy-fz", "sharded") else cfg.backend
+    return dataclasses.replace(
+        cfg, symbol_size=4, backend="lossy-fz", decoder="auto",
+        lossy_eb=float(eb), lossy_inner=inner,
+    )
+
+
+def _lossy_method_params(lcfg: LZSSConfig) -> tuple:
+    """The static (mode, inner_method) pin — known from the config alone,
+    so the in-graph decode needs no host-side header parse."""
+    mode = (
+        fmt.LOSSY_MODE_QUANT if float(lcfg.lossy_eb) > 0.0
+        else fmt.LOSSY_MODE_LOSSLESS
+    )
+    inner = pipeline.container_method(
+        pipeline.resolve_backend(lcfg.lossy_inner)
+    )
+    return (mode, inner)
+
+
+def _compress_slabs_lossy(g_padded, codes_padded, lcfg, ratio_cap):
+    """(n_slabs, slab) f32 grads -> ((n_slabs, cap) u8 payloads, used_lz).
+
+    Same wire budget as the u16 path (2/ratio_cap bytes/element), but a slab
+    that fits carries an error-bounded lossy-fz container: max |g' - g| <= eb
+    per element (exact for non-finite elements).  A slab whose container
+    exceeds the budget degrades to the u16 quantization codes (used_lz=False
+    — error scale/2, NOT eb-bounded), keeping the exchange fixed-shape.
+    """
+    n_slabs, slab = g_padded.shape
+    c = lcfg.chunk_symbols
+    cap = _cap_bytes(slab, ratio_cap)
+    bits = lax.bitcast_convert_type(g_padded.astype(jnp.float32), jnp.int32)
+    blobs, totals = pipeline.compress_many_chunks(
+        bits.reshape(n_slabs, slab // c, c), lcfg,
+        jnp.full((n_slabs,), slab * 4, jnp.int32),
+    )
+    used_lz = totals <= cap
+    if cap >= slab * 2:  # budget fits raw u16 codes
+        fb = jnp.stack(
+            [codes_padded & 0xFF, codes_padded >> 8], axis=2
+        ).reshape(n_slabs, -1)[:, :cap]
+    else:                # tight budget: int8 fallback (high bytes)
+        fb = jnp.pad(
+            codes_padded >> 8, ((0, 0), (0, max(0, cap - slab)))
+        )[:, :cap]
+    payload = jnp.where(
+        used_lz[:, None], blobs[:, :cap].astype(jnp.int32), fb
+    )
+    return payload.astype(jnp.uint8), used_lz
+
+
+def _decompress_slabs_lossy(payload, used_lz, slab, lcfg, scale):
+    """Inverse of _compress_slabs_lossy -> (n_slabs, slab) f32 gradients."""
+    n_slabs, cap = payload.shape
+    c = lcfg.chunk_symbols
+    nc = slab // c
+    # method-2 containers carry no per-chunk tables (held zero); the decode
+    # hook reads everything it needs from the blob at static offsets
+    zeros = jnp.zeros((n_slabs, nc), jnp.int32)
+    syms = pipeline.decompress_many_chunks(
+        payload, zeros, zeros,
+        symbol_size=4, chunk_symbols=c, n_chunks=nc, decoder="lossy-fz",
+        chunks_per_block=lcfg.chunks_per_block,
+        method_params=_lossy_method_params(lcfg),
+    ).reshape(n_slabs, -1)
+    g_lz = lax.bitcast_convert_type(syms, jnp.float32)
+    # fallback slabs carry u16 quantization codes (same wire layout as the
+    # legacy path's fallback branches)
+    p32 = payload.astype(jnp.int32)
+    if cap >= slab * 2:
+        pairs = p32[:, : slab * 2].reshape(n_slabs, -1, 2)
+        codes_fb = pairs[..., 0] | (pairs[..., 1] << 8)
+    else:
+        hi = jnp.pad(p32, ((0, 0), (0, max(0, slab - cap))))[:, :slab]
+        codes_fb = (hi << 8) | 128
+    g_fb = dequantize_u16(codes_fb, scale)
+    return jnp.where(used_lz[:, None], g_lz, g_fb)
+
+
 def _decompress_slabs(payload, used_lz, slab, cfg):
     """Inverse of _compress_slabs -> (n_slabs, slab) int32 codes."""
     n_slabs, cap = payload.shape
@@ -135,19 +225,33 @@ def _decompress_slabs(payload, used_lz, slab, cfg):
     return jnp.where(used_lz[:, None], syms_lz, syms_raw)
 
 
-def compress_leaf(g, cfg: LZSSConfig = GRAD_LZ, ratio_cap: float = 2.0):
+def compress_leaf(g, cfg: LZSSConfig = GRAD_LZ, ratio_cap: float = 2.0,
+                  lossy_eb=None):
     """Gradient leaf -> fixed-size wire format.
 
     Returns dict: payload (uint8, 2/ratio_cap bytes/elem), used_lz (bool per
     slab), scale (f32).  Large leaves are slab-split (int32-offset safety +
     parallel compression); slabs whose LZSS container exceeds the budget
     degrade to int8 precision (used_lz=False).
+
+    ``lossy_eb`` (``CompressionConfig.lossy_eb``) switches fitting slabs to
+    the error-bounded ``lossy-fz`` path at the SAME wire budget: max
+    |g' - g| <= eb per element instead of the u16 quantization's scale/2.
+    Fallback slabs still carry the u16 codes either way.
     """
     n = g.size
     codes, scale = quantize_u16(g.reshape(-1))
     slab, n_slabs = _slab_geometry(n, cfg)
     padded = jnp.pad(codes, (0, n_slabs * slab - n)).reshape(n_slabs, slab)
-    payload, used_lz = _compress_slabs(padded, cfg, ratio_cap)
+    if lossy_eb is None:
+        payload, used_lz = _compress_slabs(padded, cfg, ratio_cap)
+    else:
+        gp = jnp.pad(
+            g.reshape(-1).astype(jnp.float32), (0, n_slabs * slab - n)
+        ).reshape(n_slabs, slab)
+        payload, used_lz = _compress_slabs_lossy(
+            gp, padded, lossy_grad_config(lossy_eb, cfg), ratio_cap
+        )
     return {
         "payload": payload.reshape(-1),
         "used_lz": used_lz,
@@ -156,7 +260,7 @@ def compress_leaf(g, cfg: LZSSConfig = GRAD_LZ, ratio_cap: float = 2.0):
 
 
 def decompress_leaf(wire, shape, cfg: LZSSConfig = GRAD_LZ,
-                    ratio_cap: float = 2.0):
+                    ratio_cap: float = 2.0, lossy_eb=None):
     """Inverse of compress_leaf -> fp32 gradient leaf."""
     n = 1
     for s in shape:
@@ -164,6 +268,12 @@ def decompress_leaf(wire, shape, cfg: LZSSConfig = GRAD_LZ,
     slab, n_slabs = _slab_geometry(n, cfg)
     cap = _cap_bytes(slab, ratio_cap)
     payload = wire["payload"].reshape(n_slabs, cap)
+    if lossy_eb is not None:
+        g = _decompress_slabs_lossy(
+            payload, wire["used_lz"], slab,
+            lossy_grad_config(lossy_eb, cfg), wire["scale"],
+        ).reshape(-1)[:n]
+        return g.reshape(shape)
     codes = _decompress_slabs(
         payload, wire["used_lz"], slab, cfg
     ).reshape(-1)[:n]
@@ -172,7 +282,7 @@ def decompress_leaf(wire, shape, cfg: LZSSConfig = GRAD_LZ,
 
 def pod_exchange_compressed(grad_stack, mesh, compress: bool = True,
                             cfg: LZSSConfig = GRAD_LZ,
-                            ratio_cap: float = 2.0):
+                            ratio_cap: float = 2.0, lossy_eb=None):
     """Average pod-stacked gradients; the pod-axis collective carries only
     compressed bytes.
 
@@ -207,13 +317,16 @@ def pod_exchange_compressed(grad_stack, mesh, compress: bool = True,
         if not compress or size < MIN_COMPRESS_SIZE:
             return jnp.mean(rep(g).astype(jnp.float32), axis=0).astype(g.dtype)
         wire = shbatch.shard_vmap(
-            lambda x: compress_leaf(x, local_cfg, ratio_cap), mesh, "pod"
+            lambda x: compress_leaf(x, local_cfg, ratio_cap, lossy_eb),
+            mesh, "pod",
         )(g)
         wire = jax.tree.map(rep, wire)  # <- compressed pod all-gather
         acc = 0.0
         for k in range(n_pods):
             wk = jax.tree.map(lambda x: x[k], wire)
-            acc = acc + decompress_leaf(wk, shape, local_cfg, ratio_cap)
+            acc = acc + decompress_leaf(
+                wk, shape, local_cfg, ratio_cap, lossy_eb
+            )
         return (acc / n_pods).astype(g.dtype)
 
     return jax.tree.map(exchange_leaf, grad_stack)

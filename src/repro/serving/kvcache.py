@@ -57,10 +57,16 @@ class KVBlockStore:
     decoder default to the ``"sharded"`` registry pair, which runs the
     platform pipeline per shard — stored blobs stay byte-identical to the
     single-device dispatch.
+
+    ``lossy_eb`` selects the error-bounded ``lossy-fz`` codec for evicted
+    blocks (f32 blocks ONLY — rejected otherwise): each restored element is
+    within ``eb`` of the evicted value (non-finite elements exact), traded
+    for a better eviction ratio.  An explicit ``backend`` then names the
+    codec's *inner* lossless stage.
     """
 
     def __init__(self, compress: bool = True, config=None, decoder=None,
-                 backend=None, mesh=None, batch_axis=None):
+                 backend=None, mesh=None, batch_axis=None, lossy_eb=None):
         self.compress = compress
         if config is None:
             config = KV_LZ
@@ -73,6 +79,16 @@ class KVBlockStore:
             overrides["backend"] = backend
         if decoder is not None:
             overrides["decoder"] = decoder
+        if lossy_eb is not None:
+            # the named backend becomes the inner lossless stage of the
+            # lossy container (mirrors optim/grad_compress.lossy_grad_config)
+            inner = overrides.get("backend", "auto")
+            overrides["lossy_inner"] = (
+                "auto" if inner in ("lossy-fz", "sharded") else inner
+            )
+            overrides["backend"] = "lossy-fz"
+            overrides["symbol_size"] = 4
+            overrides["lossy_eb"] = float(lossy_eb)
         if mesh is not None:
             # a mesh implies the sharded registry pair unless this call
             # explicitly picked a different strategy ("auto" is not one)
@@ -101,6 +117,17 @@ class KVBlockStore:
         keys = [k for k, _ in items]
         raws = [np.ascontiguousarray(b) for _, b in items]
         metas = [(r.dtype.str, r.shape) for r in raws]
+        if self.compress and self.config.backend == "lossy-fz":
+            bad = [
+                (k, str(r.dtype)) for k, r in zip(keys, raws)
+                if r.dtype != np.float32
+            ]
+            if bad:
+                raise ValueError(
+                    f"lossy_eb eviction codec (lossy-fz) bounds the error of "
+                    f"float32 blocks only; got {bad} — evict these through a "
+                    f"lossless store (lossy_eb=None)"
+                )
         if self.compress:
             batch = lzss.compress_many(
                 [r.view(np.uint8).reshape(-1) for r in raws], self.config
@@ -139,21 +166,30 @@ class KVBlockStore:
         for i, (codec, _, blob) in enumerate(popped):
             if codec == "gpulz":
                 h = lzss.fmt.parse_header(blob)
-                # version + entropy-method byte are part of the batching key:
-                # a store holding both raw-method and deflate-full blobs
-                # (kv_backend changed between rounds) must not land a
-                # mixed-method batch in one decompress_many call
+                # version + method byte are part of the batching key: a
+                # store holding raw, deflate-full and lossy blobs (codec
+                # changed between rounds) must not land a mixed-method batch
+                # in one decompress_many call; lossy blobs additionally
+                # split on their static decode params (mode, inner method)
                 key = (h.version, h.method, h.symbol_size, h.chunk_symbols,
-                       h.n_chunks)
+                       h.n_chunks, h.lossy_mode, h.inner_method)
                 groups.setdefault(key, []).append(i)
         # an explicitly non-sharded decoder + mesh means compress-side
         # sharding only: restore single-device rather than conflicting
         sharded = self.config.decoder in ("auto", "sharded")
+        method_only = {
+            lzss.fmt.METHOD_HUFFMAN: "deflate-full",
+            lzss.fmt.METHOD_LOSSY: "lossy-fz",
+        }
         for gkey, idxs in groups.items():
             decoder = self.config.decoder
-            if decoder == "deflate-full" and gkey[1] != lzss.fmt.METHOD_HUFFMAN:
-                # method-1-only decoder, raw-method group (kv_backend
-                # changed between eviction rounds): fall back per group
+            if decoder not in ("auto", "sharded") and decoder != \
+                    method_only.get(gkey[1]) and (
+                        decoder in method_only.values()
+                        or gkey[1] in method_only
+                    ):
+                # decoder/method mismatch (codec changed between eviction
+                # rounds): fall back per group — the method byte routes
                 decoder = "auto"
             raws = lzss.decompress_many(
                 [popped[i][2] for i in idxs], decoder=decoder,

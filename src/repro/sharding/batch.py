@@ -216,6 +216,7 @@ class ShardedBatchRunner:
         n_chunks,
         decoder="auto",
         chunks_per_block=None,
+        method_params=(),
     ):
         """(B, L) blobs + (B, nc) tables -> (B, nc, C) symbols, sharded."""
         dec = pipeline.resolve_decoder("auto" if decoder == "sharded" else decoder)
@@ -225,6 +226,7 @@ class ShardedBatchRunner:
             n_chunks=n_chunks,
             decoder=dec,
             chunks_per_block=chunks_per_block,
+            method_params=method_params,
         )
         if self.n_shards == 1:
             return pipeline.decompress_many_chunks(

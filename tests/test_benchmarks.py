@@ -22,6 +22,15 @@ import pytest
 fig8 = pytest.importorskip("benchmarks.fig8_ratio")
 fig9 = pytest.importorskip("benchmarks.fig9_throughput")
 fig10 = pytest.importorskip("benchmarks.fig10_decode")
+fig_lossy = pytest.importorskip("benchmarks.fig_lossy")
+
+
+def _lossless(keys):
+    """The registry keys the lossless sweeps cover (the method-2 lossy-fz
+    pair has its own bound-axis sweep: fig_lossy.py / BENCH_lossy.json)."""
+    from repro.core import format as fmt, pipeline
+
+    return {k for k in keys if pipeline.container_method(k) != fmt.METHOD_LOSSY}
 
 REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
 
@@ -137,10 +146,10 @@ def test_bench_decode_artifact_schema():
     assert isinstance(rec["platform"], str)
     assert isinstance(rec["interpret_mode"], bool)
     assert rec["ratio"] > 1  # the sweep corpus actually compresses
-    # one entry per registered decoder: a decoder added to the registry but
-    # missing from the tracked sweep means BENCH_decode.json went stale
-    # (>= not ==: test-registered custom decoders may come and go)
-    assert set(rec["decoders"]) >= set(lzss.available_decoders()), (
+    # one entry per registered lossless decoder: a decoder added to the
+    # registry but missing from the tracked sweep means BENCH_decode.json
+    # went stale (>= not ==: test-registered custom decoders may come and go)
+    assert set(rec["decoders"]) >= _lossless(lzss.available_decoders()), (
         "BENCH_decode.json is missing registered decoders; regenerate via "
         "benchmarks/fig10_decode.py (default --decoders all)"
     )
@@ -160,10 +169,10 @@ def test_bench_ratio_artifact_schema():
     assert rec["benchmark"] == "fig8_ratio_sweep"
     assert isinstance(rec["platform"], str)
     assert isinstance(rec["interpret_mode"], bool)
-    # one entry per registered compressor backend: a backend added to the
+    # one entry per registered lossless backend: a backend added to the
     # registry but missing from the tracked sweep means BENCH_ratio.json
     # went stale (>= not ==: test-registered custom backends come and go)
-    assert set(rec["backends"]) >= set(lzss.available_backends()), (
+    assert set(rec["backends"]) >= _lossless(lzss.available_backends()), (
         "BENCH_ratio.json is missing registered backends; regenerate via "
         "benchmarks/fig8_ratio.py (default --backends all)"
     )
@@ -179,6 +188,59 @@ def test_bench_ratio_artifact_schema():
     # must strictly beat the LZSS-only container on the tracked corpus
     assert rec[fig8.ratio_key("deflate-full")] > 1, (
         "deflate-full ratio regressed to (or below) the LZSS-only baseline"
+    )
+
+
+def test_fig_lossy_sweep_smoke(tmp_path):
+    rng = np.random.default_rng(1)
+    f32 = np.cumsum(rng.normal(size=2048).astype(np.float32)) * 0.01
+    out = tmp_path / "BENCH_lossy.json"
+    rec = fig_lossy.lossy_sweep(
+        f32.view(np.uint8), ebs=(1e-3, 0.0), sweep_nbytes=4096,
+        out_json=str(out), dataset="smoke",
+    )
+    assert out.exists()
+    disk = json.loads(out.read_text())
+    assert disk["benchmark"] == rec["benchmark"] == "fig_lossy_sweep"
+    assert set(disk["ebs"]) == {"0.001", "0"}
+    assert disk["ebs"]["0"]["max_abs_err"] == 0.0
+    assert disk["eb_0.001_over_lossless"] > 0
+
+
+def test_bench_lossy_artifact_schema():
+    """The tracked BENCH_lossy.json: every row certified within its bound
+    (the sweep asserts before writing; this guards the committed record),
+    measured on a real (non-smoke) slice, bit-exact reference row present."""
+    rec = _tracked("BENCH_lossy.json")
+    assert rec["benchmark"] == "fig_lossy_sweep"
+    assert isinstance(rec["platform"], str)
+    assert isinstance(rec["interpret_mode"], bool)
+    rows = rec["ebs"]
+    assert len(rows) >= 3, "sweep must cover several bounds"
+    assert "0" in rows, "the bit-exact eb=0 reference row is required"
+    for key, entry in rows.items():
+        assert entry["bound_ok"] is True, key
+        assert entry["ratio"] > 0 and entry["total_bytes"] > 0, key
+        assert entry["compress_seconds_per_call"] > 0, key
+        assert entry["decode_seconds_per_call"] > 0, key
+        if entry["eb"] == 0.0:
+            assert entry["max_abs_err"] == 0.0
+        else:
+            assert entry["max_abs_err"] <= np.float32(entry["eb"]), key
+        assert entry["nbytes"] >= MIN_TRACKED_SWEEP_NBYTES, (
+            f"ebs[{key}]: nbytes={entry['nbytes']} looks like a "
+            f"bench-lossy-smoke run written to the repo root (smoke "
+            f"artifacts belong in /tmp; see the Makefile bench-lossy-smoke "
+            f"target)"
+        )
+    # the point of the frontend: a loosened bound must buy ratio over the
+    # bit-exact reference on the tracked corpus
+    loosest = max(
+        (e for e in rows.values() if e["eb"] > 0), key=lambda e: e["eb"]
+    )
+    assert loosest["ratio"] > rows["0"]["ratio"], (
+        "lossy ratio at the loosest bound regressed to (or below) the "
+        "bit-exact reference"
     )
 
 

@@ -24,7 +24,8 @@ def _corpus(seed, n=1200):
 
 def test_registry_lists_all_decoders():
     assert {
-        "xla-parallel", "xla-scan", "fused", "fused-mono", "deflate-full"
+        "xla-parallel", "xla-scan", "fused", "fused-mono", "deflate-full",
+        "lossy-fz",
     } <= set(lzss.available_decoders())
 
 
@@ -175,11 +176,22 @@ def test_all_decoders_identical(symbol_size, level):
 @pytest.mark.parametrize("decoder", sorted(pipeline._DECODERS))
 def test_compressor_decoder_cross_product(backend, decoder):
     """Method-matched pairs roundtrip byte-identically; an entropy container
-    handed to a raw decoder (or vice versa) is a clean ValueError."""
-    data = _corpus(3, n=800)
-    cfg = lzss.LZSSConfig(
-        symbol_size=2, window=32, chunk_symbols=64, backend=backend
-    )
+    handed to a raw decoder (or vice versa) is a clean ValueError.  The
+    lossy-fz backend joins the product in its bit-exact eb=0 mode (f32
+    symbols); its eb>0 bound is tests/test_lossy.py's domain."""
+    from repro.core import format as fmt
+
+    if pipeline.container_method(backend) == fmt.METHOD_LOSSY:
+        data = _corpus(3, n=800).astype(np.float32) * 0.25
+        cfg = lzss.LZSSConfig(
+            symbol_size=4, window=32, chunk_symbols=64, backend=backend,
+            lossy_eb=0.0,
+        )
+    else:
+        data = _corpus(3, n=800)
+        cfg = lzss.LZSSConfig(
+            symbol_size=2, window=32, chunk_symbols=64, backend=backend
+        )
     res = lzss.compress(data, cfg)
     if pipeline.container_method(backend) != pipeline.container_method(decoder):
         with pytest.raises(ValueError):

@@ -90,10 +90,37 @@ ENTROPY_CASES = {
     "f32_s4_w64_c64_deflate": (_f32_waves, 4, 64, 64),
 }
 
-ALL_CASES = {**CASES, **ENTROPY_CASES}
+# method-2 cases: the f32 base input through the error-bounded lossy-fz
+# pair — pins the lossy metadata block, the bitshuffle wire layout, the
+# inner container placement and the outlier section byte-for-byte.  The
+# quantized encoder chain is f32-deterministic by design (core/lossy.py
+# ``_rcp``), so the bytes are stable across platforms like every other case.
+# name -> (builder, s, w, c, eb); eb=0 pins the lossless passthrough mode.
+LOSSY_CASES = {
+    "f32_s4_w64_c64_lossy": (_f32_waves, 4, 64, 64, 1e-3),
+    "f32_s4_w64_c64_lossy_eb0": (_f32_waves, 4, 64, 64, 0.0),
+}
+
+ALL_CASES = {**CASES, **ENTROPY_CASES, **LOSSY_CASES}
+
+
+def _case_base(name):
+    """Derived cases reuse their base case's input byte-for-byte."""
+    for suffix in ("_deflate", "_lossy", "_lossy_eb0"):
+        if name.endswith(suffix):
+            return name[: -len(suffix)]
+    return name
 
 
 def _case_cfg(name):
+    if name in LOSSY_CASES:
+        _, s, w, c, eb = LOSSY_CASES[name]
+        # inner stage pinned to 'xla' (all method-0 backends are
+        # byte-identical, but the pin keeps the cfg platform-independent)
+        return lzss.LZSSConfig(
+            symbol_size=s, window=w, chunk_symbols=c, backend="lossy-fz",
+            lossy_eb=eb, lossy_inner="xla",
+        )
     _, s, w, c = ALL_CASES[name]
     backend = "deflate-full" if name in ENTROPY_CASES else "xla"
     return lzss.LZSSConfig(
@@ -142,6 +169,22 @@ def test_golden_blob_decodes_to_input(name):
     assert h.version == fmt.VERSION
     assert h.symbol_size == ALL_CASES[name][1]
     assert h.window == ALL_CASES[name][2]
+    if name in LOSSY_CASES:
+        eb = LOSSY_CASES[name][4]
+        assert h.method == fmt.METHOD_LOSSY
+        out = np.asarray(lzss.decompress(golden))
+        if eb == 0.0:
+            assert h.lossy_mode == fmt.LOSSY_MODE_LOSSLESS
+            assert np.array_equal(out, data)
+        else:
+            assert h.lossy_mode == fmt.LOSSY_MODE_QUANT
+            x, rec = data.view(np.float32), out.view(np.float32)
+            fin = np.isfinite(x)
+            assert np.array_equal(
+                rec[~fin].view(np.uint32), x[~fin].view(np.uint32)
+            )
+            assert np.max(np.abs(rec[fin] - x[fin])) <= np.float32(eb)
+        return
     want_method = (
         fmt.METHOD_HUFFMAN if name in ENTROPY_CASES else fmt.METHOD_RAW
     )
@@ -175,16 +218,25 @@ def test_version_mismatch_raises_naming_versions():
         lzss.decompress(bad)
 
 
-def _regen():
+def _regen(only=None):
     GOLDEN_DIR.mkdir(exist_ok=True)
     for name in sorted(ALL_CASES):
+        if only and name not in only:
+            continue
         build = ALL_CASES[name][0]
         # seeds must not depend on PYTHONHASHSEED: derive from the name
-        # bytes; entropy cases reuse their base case's input byte-for-byte
-        base = name[: -len("_deflate")] if name in ENTROPY_CASES else name
-        seed = int.from_bytes(base.encode(), "little") % (1 << 32)
-        data = build(np.random.default_rng(seed))
-        raw = np.ascontiguousarray(data).view(np.uint8).reshape(-1)
+        # bytes; derived cases reuse their base case's input byte-for-byte —
+        # from disk when the base input is already checked in (builder
+        # bit-streams are not guaranteed stable across numpy versions, so
+        # rebuilding could silently drift a derived case off its base)
+        base = _case_base(name)
+        base_inp = GOLDEN_DIR / f"{base}.input.bin"
+        if base != name and base_inp.exists():
+            raw = np.frombuffer(base_inp.read_bytes(), np.uint8)
+        else:
+            seed = int.from_bytes(base.encode(), "little") % (1 << 32)
+            data = build(np.random.default_rng(seed))
+            raw = np.ascontiguousarray(data).view(np.uint8).reshape(-1)
         res = lzss.compress(raw, _case_cfg(name))
         inp, gold = _golden_paths(name)
         inp.write_bytes(bytes(raw))

@@ -24,6 +24,12 @@ RAW_DECODERS = sorted(
     d for d in lzss.available_decoders()
     if pipeline.container_method(d) == fmt.METHOD_RAW
 )
+# the f32-only lossy pair has its own bound property below; the lossless
+# differential fuzz sweeps every bit-exact backend
+LOSSLESS_BACKENDS = sorted(
+    b for b in lzss.available_backends()
+    if pipeline.container_method(b) != fmt.METHOD_LOSSY
+)
 
 
 def roundtrip(data: np.ndarray, cfg: lzss.LZSSConfig):
@@ -72,7 +78,7 @@ def adversarial_case(draw):
 
 @given(
     case=adversarial_case(),
-    backend=st.sampled_from(sorted(lzss.available_backends())),
+    backend=st.sampled_from(LOSSLESS_BACKENDS),
     decoder=st.sampled_from(sorted(lzss.available_decoders())),
 )
 def test_differential_fuzz_property(case, backend, decoder):
@@ -207,6 +213,36 @@ def test_match_invariants_property(vals, w):
         np.testing.assert_array_equal(
             syms[0, i : i + ln], syms[0, i - off : i - off + ln]
         )
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    vals=st.lists(
+        st.floats(width=32, allow_nan=True, allow_infinity=True),
+        min_size=1, max_size=300,
+    ),
+    eb=st.sampled_from([1e-1, 1e-3, 1e-5, 0.0]),
+)
+def test_lossy_container_bound_property(vals, eb):
+    """The full lossy-fz container round-trip honors max |x' - x| <= eb for
+    every finite element (bit-exact at eb == 0), with NaN/±inf bit patterns
+    preserved through the outlier section — on arbitrary f32 streams, not
+    just the curated corpora (the deterministic twin is tests/test_lossy.py,
+    which is what runs in the CI lossy lane; hypothesis widens the inputs)."""
+    x = np.array(vals, np.float32)
+    cfg = lzss.LZSSConfig(symbol_size=4, window=64, chunk_symbols=128,
+                          backend="lossy-fz", lossy_eb=eb)
+    res = lzss.compress(x, cfg)
+    rec = np.asarray(lzss.decompress(res.data)).view(np.float32)
+    if eb == 0.0:
+        np.testing.assert_array_equal(rec.view(np.uint32), x.view(np.uint32))
+        return
+    fin = np.isfinite(x)
+    np.testing.assert_array_equal(
+        rec[~fin].view(np.uint32), x[~fin].view(np.uint32)
+    )
+    if fin.any():
+        assert float(np.max(np.abs(rec[fin] - x[fin]))) <= np.float32(eb)
 
 
 @given(

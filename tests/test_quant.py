@@ -57,3 +57,44 @@ def test_outlier_handling():
     xr = quant.dequantize(q.codes, q.outlier_mask, q.outlier_vals,
                           error_bound=1e-3, ndim=1)
     assert abs(float(xr[50]) - 1e9) <= 1.0
+
+
+def _roundtrip_err(x, eb):
+    q = quant.quantize(jnp.asarray(x), error_bound=eb, ndim=1)
+    xr = quant.dequantize(q.codes, q.outlier_mask, q.outlier_vals,
+                          error_bound=eb, ndim=1)
+    return q, float(jnp.max(jnp.abs(xr - jnp.asarray(x))))
+
+
+def test_all_outlier_input():
+    """Every element saturating the code range must stay within the bound
+    (each one rides the exact outlier path, not a clipped code)."""
+    rng = np.random.default_rng(7)
+    x = (rng.normal(size=300) * 1e9).astype(np.float32)
+    eb = 1e-3
+    q, err = _roundtrip_err(x, eb)
+    assert bool(q.outlier_mask.all())
+    assert err <= eb + 1e-5
+
+
+def test_eb_larger_than_data_range():
+    """A bound wider than the whole data range quantizes everything to the
+    zero bin — still within eb, no outliers, maximally compressible codes."""
+    rng = np.random.default_rng(8)
+    x = rng.uniform(-0.4, 0.4, 256).astype(np.float32)
+    q, err = _roundtrip_err(x, 1.0)
+    assert err <= 1.0
+    assert not bool(q.outlier_mask.any())
+    assert int(np.unique(np.asarray(q.codes)).size) <= 2  # first-delta + runs
+
+
+def test_denormal_floats():
+    """Denormals are within any positive eb of zero; the quantizer must not
+    overflow or promote them to outliers."""
+    x = np.full(128, 1e-42, np.float32)
+    x[::5] = -4e-44
+    x[7] = np.float32(5e-324)  # rounds to the smallest f32 denormal or 0
+    eb = 1e-6
+    q, err = _roundtrip_err(x, eb)
+    assert err <= eb + 1e-12
+    assert not bool(q.outlier_mask.any())
