@@ -10,13 +10,15 @@
 # bench-kv-smoke in a serving lane (also 8 forced host devices, for the
 # sharded eviction/restore tests), test-property as its own hypothesis
 # lane, test-lossy + bench-lossy-smoke in a lossy lane (error-bounded
-# frontend conformance), and `ruff check` / `ruff format --check` as a
-# separate lint job.
+# frontend conformance), test-async as the crash-consistency/fault-
+# injection lane for the async checkpoint writer (pytest-timeout +
+# faulthandler so a deadlock fails with stacks instead of hanging), and
+# `ruff check` / `ruff format --check` as a separate lint job.
 
 PY ?= python
 
 .PHONY: test test-fast test-multidevice test-property test-serving \
-	test-lossy check-bench lint \
+	test-lossy test-async check-bench lint \
 	bench-pipeline bench-decode bench-ratio bench-sharded bench-kv \
 	bench-lossy bench-sharded-smoke bench-decode-smoke bench-ratio-smoke \
 	bench-kv-smoke bench-lossy-smoke bench-smoke bench
@@ -27,10 +29,11 @@ test:
 # test_properties.py is excluded here: its strategies deliberately mint
 # fresh jit traces per fuzzed geometry, which is the dedicated property
 # lane's job (test-property below) — running it in the 2x-Python CI matrix
-# would duplicate that wall-clock on every PR.  Plain `make test` still
-# includes it.
+# would duplicate that wall-clock on every PR.  Likewise the stress-marked
+# concurrency tests belong to the async lane (test-async below).  Plain
+# `make test` still includes both.
 test-fast:
-	PYTHONPATH=src $(PY) -m pytest -x -q -m "not slow" \
+	PYTHONPATH=src $(PY) -m pytest -x -q -m "not slow and not stress" \
 		--ignore=tests/test_properties.py
 
 # Property-based lane (requires hypothesis: pip install -e .[test]).  The
@@ -66,6 +69,18 @@ test-lossy:
 	PYTHONPATH=src HYPOTHESIS_PROFILE=ci-property $(PY) -m pytest -q \
 		tests/test_properties.py -k lossy
 
+# Async-I/O lane: crash-consistency, fault-injection and concurrency-stress
+# harness for the double-buffered background checkpoint writer
+# (runtime/async_io.py + the runtime/fault.py FaultyFS seam).  Deadlocks
+# must FAIL, not hang CI: pytest-timeout (pip install -e .[test]) bounds
+# each test — its flags are auto-omitted where the plugin isn't installed
+# (offline container) — and pytest's built-in faulthandler dumps every
+# thread's stack as a last resort either way.
+test-async:
+	PYTHONPATH=src $(PY) -m pytest -q tests/test_async_io.py \
+		-p faulthandler -o faulthandler_timeout=300 \
+		$$($(PY) -c "import importlib.util as u; print('--timeout=300 --timeout-method=thread' if u.find_spec('pytest_timeout') else '')")
+
 # Schema-validate the tracked BENCH_*.json perf records (catches a smoke run
 # accidentally written to the repo root before it clobbers the trajectory)
 # plus the core/autotune.py cache schema (a drift there would silently
@@ -83,7 +98,7 @@ lint:
 		src/repro/serving \
 		src/repro/core/pipeline.py src/repro/core/autotune.py \
 		src/repro/core/entropy.py src/repro/core/lossy.py \
-		src/repro/core/bitshuffle.py
+		src/repro/core/bitshuffle.py src/repro/runtime/async_io.py
 
 bench-pipeline:
 	PYTHONPATH=src:. $(PY) benchmarks/fig9_throughput.py --backend fused-mono

@@ -2,12 +2,32 @@
 
 Layout:  <dir>/step_<N>/
              manifest.json       tree structure, shapes, dtypes, per-leaf CRC
+             COMMIT              commit marker, written LAST before publish
              <leaf-id>.gplz      GPULZ container  (or .raw if compression off)
          <dir>/step_<N>.tmp...   staging dir, atomically renamed on success
 
 Fault-tolerance properties:
   * atomic publish (tmp dir + os.rename) — a crash mid-save never corrupts
     the latest checkpoint;
+  * commit-marker discipline: blobs -> manifest -> ``COMMIT`` -> rename, in
+    that order.  ``steps()`` lists only marker-bearing dirs, so a
+    half-written step (crash at ANY boundary, or a hand-planted marker-less
+    dir) is never restorable, never counts toward retention, and never
+    blocks GC of older complete steps — ``_gc`` removes such debris once no
+    writer owns it.  (Pre-marker-era checkpoints are treated as
+    uncommitted debris: re-save them.)
+  * ``async_writes=True`` hands every byte to a double-buffered background
+    writer (``runtime/async_io.AsyncBlobWriter``): ``save`` overlaps each
+    dtype-class compression dispatch with the previous group's host write
+    and returns before the step is durable.  A background failure surfaces
+    on the NEXT ``save``/``wait_until_finished`` as an ``AsyncWriteError``
+    naming the step and path; an in-flight step is never GC'd; writer
+    backpressure is exported for ``StepGuard`` accounting.  With async off
+    (default) the write path is host-synchronous exactly as before and the
+    on-disk bytes are identical either way;
+  * every write goes through the ``runtime/fault.HostFS`` seam under a
+    ``RetryPolicy`` (transient-EIO retry with backoff; ENOSPC fails fast),
+    so the crash/fault harness can inject failures at exact boundaries;
   * every leaf CRC-checked on restore; a damaged step is skipped and the
     previous valid step restored (``restore_latest``);
   * checkpoints are mesh-agnostic: leaves are stored as full logical arrays
@@ -31,13 +51,16 @@ from __future__ import annotations
 import dataclasses
 import json
 import os
-import shutil
 import zlib
 
 import jax
 import numpy as np
 
 from repro.core import lzss
+from repro.runtime.async_io import AsyncBlobWriter, RetryPolicy
+from repro.runtime.fault import HostFS
+
+COMMIT_MARKER = "COMMIT"
 
 
 def _symbol_size(dtype: np.dtype) -> int:
@@ -80,8 +103,46 @@ class CheckpointManager:
                                # Lossy leaves CRC the stored blob instead of
                                # the raw bytes (the raw bytes are not
                                # reproduced bit-exactly by design).
+    async_writes: bool = False  # hand blob/manifest/commit writes to the
+                               # double-buffered background writer; save()
+                               # returns before the step is durable and a
+                               # write failure surfaces on the NEXT save /
+                               # wait_until_finished (AsyncWriteError)
+    fs: object = None          # runtime/fault.HostFS seam (FaultyFS in the
+                               # crash/fault-injection harness)
+    writer: object = None      # injectable AsyncBlobWriter; lazily built
+    io_retry: object = None    # runtime/async_io.RetryPolicy for host
+                               # writes in BOTH modes (transient-EIO retry)
+    io_max_pending: int = 2    # async double-buffer depth: how many steps
+                               # may be in flight before save() blocks
+
+    def __post_init__(self):
+        if self.fs is None:
+            self.fs = HostFS()
+        if self.io_retry is None:
+            self.io_retry = RetryPolicy()
+        # backpressure of the most recent async save() (seconds the call
+        # blocked waiting for writer queue room) — StepGuard's io signal
+        self.last_save_io_wait_s = 0.0
 
     # ------------------------------------------------------------- save
+
+    def _get_writer(self) -> AsyncBlobWriter:
+        if self.writer is None:
+            self.writer = AsyncBlobWriter(
+                fs=self.fs, max_pending_steps=self.io_max_pending,
+                retry=self.io_retry,
+            )
+        return self.writer
+
+    def wait_until_finished(self):
+        """Block until every async write has landed; re-raise any
+        background failure (AsyncWriteError naming step and path)."""
+        if self.writer is not None:
+            self.writer.wait_until_finished()
+
+    def writer_stats(self) -> dict:
+        return self.writer.stats() if self.writer is not None else {}
 
     def _lz_config(self, symbol_size: int, lossy: bool = False) -> "lzss.LZSSConfig":
         # "auto" backend/decoder resolve per-platform at dispatch time;
@@ -113,12 +174,35 @@ class CheckpointManager:
         )
 
     def save(self, state, step: int) -> str:
-        os.makedirs(self.directory, exist_ok=True)
+        """Write one step.  Sync mode publishes before returning; async
+        mode enqueues blobs group by group — the NEXT group's compression
+        dispatch overlaps the previous group's host write — and returns
+        once the commit op is queued (the step publishes in the
+        background, in enqueue order)."""
+        fs = self.fs
         final = os.path.join(self.directory, f"step_{step:08d}")
         tmp = final + ".tmp"
-        if os.path.exists(tmp):
-            shutil.rmtree(tmp)
-        os.makedirs(tmp)
+        writer = None
+        self.last_save_io_wait_s = 0.0
+        if self.async_writes:
+            # begin_step re-raises any prior background failure (the
+            # surfaced-on-next-save contract) and blocks while the
+            # double-buffer window is full (measured backpressure)
+            writer = self._get_writer()
+            self.last_save_io_wait_s = writer.begin_step(step)
+        fs.makedirs(self.directory, exist_ok=True)
+        if fs.exists(tmp):
+            fs.rmtree(tmp)
+        fs.makedirs(tmp)
+
+        if writer is None:
+            def emit(fname: str, data) -> None:
+                path = os.path.join(tmp, fname)
+                self.io_retry.run(lambda: fs.write_bytes(path, data))
+        else:
+            def emit(fname: str, data) -> None:
+                writer.put_write(step, os.path.join(tmp, fname), data)
+
         names, leaves, _ = _leaf_paths(state)
         manifest = {"step": step, "leaves": []}
         entries, raws = [], []
@@ -152,9 +236,10 @@ class CheckpointManager:
                 entries[i]["codec"] = "raw"
                 entries[i]["stored_bytes"] = len(raw)
                 entries[i]["file"] = fname + ".raw"
-                with open(os.path.join(tmp, fname + ".raw"), "wb") as f:
-                    f.write(raw)
-        # one batched compression dispatch per dtype-class group
+                emit(entries[i]["file"], raw)
+        # one batched compression dispatch per dtype-class group; in async
+        # mode each group's blobs are queued as soon as its dispatch
+        # returns, so group k's host writes overlap group k+1's compression
         for (s, _bucket, lossy), idxs in groups.items():
             batch = lzss.compress_many(
                 [np.frombuffer(raws[i], np.uint8) for i in idxs],
@@ -171,24 +256,38 @@ class CheckpointManager:
                     # instead (still catches disk corruption before decode)
                     entries[i]["lossy"] = True
                     entries[i]["crc32"] = zlib.crc32(res.data.tobytes())
-                res.data.tofile(os.path.join(tmp, entries[i]["file"]))
+                emit(entries[i]["file"], res.data.tobytes())
         manifest["leaves"] = entries
-        with open(os.path.join(tmp, "manifest.json"), "w") as f:
-            json.dump(manifest, f)
-        if os.path.exists(final):
-            shutil.rmtree(final)
-        os.rename(tmp, final)  # atomic publish
-        self._gc()
+        emit("manifest.json", json.dumps(manifest).encode())
+        # the commit marker is written LAST: a crash at any earlier
+        # boundary leaves a marker-less dir that steps()/restore/GC treat
+        # as nonexistent debris
+        emit(COMMIT_MARKER, b"")
+        if writer is None:
+            if fs.exists(final):
+                fs.rmtree(final)
+            self.io_retry.run(lambda: fs.rename(tmp, final))
+            self._gc()
+        else:
+            writer.put_commit(step, tmp, final, after=self._gc)
         return final
 
     # ---------------------------------------------------------- restore
 
     def steps(self):
-        if not os.path.isdir(self.directory):
+        """Committed steps only: a dir without its COMMIT marker (crash
+        debris, a hand-planted partial, an in-flight async publish) is
+        never listed and therefore never restorable."""
+        fs = self.fs
+        if not fs.isdir(self.directory):
             return []
         out = []
-        for d in os.listdir(self.directory):
+        for d in fs.listdir(self.directory):
             if d.startswith("step_") and not d.endswith(".tmp"):
+                if not fs.exists(
+                    os.path.join(self.directory, d, COMMIT_MARKER)
+                ):
+                    continue
                 try:
                     out.append(int(d[5:]))
                 except ValueError:
@@ -285,12 +384,43 @@ class CheckpointManager:
         return None, -1
 
     def _gc(self):
-        steps = self.steps()
-        for s in steps[: -self.keep]:
-            shutil.rmtree(
-                os.path.join(self.directory, f"step_{s:08d}"),
-                ignore_errors=True,
-            )
+        """Retention GC, commit-marker- and in-flight-aware.
+
+        * only COMMITTED steps count toward ``keep`` (a half-written step
+          never blocks GC of older complete ones);
+        * a step the async writer still owns — registered but not yet
+          renamed — is never deleted, nor is its staging dir;
+        * marker-less ``step_*`` dirs and stale ``*.tmp`` dirs (crash
+          debris) are swept once no writer owns them.
+
+        Runs on the worker thread after each async commit (FIFO queue =
+        the rename happened-before this GC) and inline after sync saves.
+        """
+        fs = self.fs
+        if not fs.isdir(self.directory):
+            return
+        inflight = (
+            self.writer.in_flight() if self.writer is not None else set()
+        )
+        protected = set()
+        for s in inflight:
+            protected.add(f"step_{s:08d}")
+            protected.add(f"step_{s:08d}.tmp")
+        for s in self.steps()[: -self.keep]:
+            name = f"step_{s:08d}"
+            if name in protected:
+                continue
+            fs.rmtree(os.path.join(self.directory, name), ignore_errors=True)
+        for d in fs.listdir(self.directory):
+            if not d.startswith("step_") or d in protected:
+                continue
+            path = os.path.join(self.directory, d)
+            if not fs.isdir(path):
+                continue
+            if d.endswith(".tmp") or not fs.exists(
+                os.path.join(path, COMMIT_MARKER)
+            ):
+                fs.rmtree(path, ignore_errors=True)
 
     def stats(self, step: int) -> dict:
         d = os.path.join(self.directory, f"step_{step:08d}")

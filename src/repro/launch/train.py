@@ -60,7 +60,10 @@ def build(args):
 def train_loop(args):
     cfg, traincfg, mesh, shape = build(args)
     jfn, st_sh, b_sh = steps.make_train_step(cfg, traincfg, mesh, shape)
-    mgr = CheckpointManager(args.ckpt_dir, compress=True) if args.ckpt_dir else None
+    mgr = CheckpointManager(
+        args.ckpt_dir, compress=True,
+        async_writes=bool(args.async_ckpt),
+    ) if args.ckpt_dir else None
     guard = StepGuard(heartbeat_path=args.heartbeat)
 
     state = None
@@ -81,13 +84,18 @@ def train_loop(args):
     )
     prefetch = Prefetcher(dc, start_step, shardings=b_sh)
     losses = []
+    io_wait = 0.0  # ckpt I/O block time since the last observe
     for step in range(start_step, traincfg.total_steps):
         batch = prefetch.next()
         t0 = time.time()
         state, metrics = jfn(state, batch)
         loss = float(metrics["loss"])
         dt = time.time() - t0
-        slow = guard.observe(step, dt)
+        # io_wait is the previous save's stall: the async writer's enqueue
+        # backpressure (or the full write time in sync mode), accounted by
+        # StepGuard as its own straggler axis, never the compute EWMA
+        slow = guard.observe(step, dt, io_wait_s=io_wait)
+        io_wait = 0.0
         losses.append(loss)
         if step % args.log_every == 0 or step == traincfg.total_steps - 1:
             tok_s = shape.global_batch * shape.seq_len / dt
@@ -98,12 +106,26 @@ def train_loop(args):
                 f"({tok_s:,.0f} tok/s){' [straggler]' if slow else ''}"
             )
         if mgr is not None and (step + 1) % args.ckpt_every == 0:
+            ts = time.time()
             mgr.save(state, step + 1)
+            io_wait = (
+                mgr.last_save_io_wait_s if args.async_ckpt
+                else time.time() - ts
+            )
         if guard.should_restart:
             raise RuntimeError("straggler watchdog tripped")
     if mgr is not None:
         mgr.save(state, traincfg.total_steps)
+        mgr.wait_until_finished()  # drain async writes before reporting
         print("[train] final checkpoint:", mgr.stats(traincfg.total_steps))
+        if args.async_ckpt:
+            ws = mgr.writer_stats()
+            print(
+                f"[train] async writer: {ws.get('writes', 0)} writes, "
+                f"{ws.get('commits', 0)} commits, "
+                f"{ws.get('blocked_s', 0.0)*1e3:.1f} ms backpressure; "
+                f"io stalls {guard.stats.io_stalls}"
+            )
     print(
         f"[train] loss {losses[0]:.4f} -> {losses[-1]:.4f} over "
         f"{len(losses)} steps"
@@ -125,6 +147,10 @@ def main():
     ap.add_argument("--microbatches", type=int, default=1)
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--async-ckpt", action="store_true",
+                    help="double-buffered background checkpoint writes "
+                         "(runtime/async_io.py); save() stops stalling the "
+                         "step on host I/O")
     ap.add_argument("--heartbeat", default="")
     ap.add_argument("--log-every", type=int, default=10)
     args = ap.parse_args()

@@ -20,6 +20,15 @@ exact.  Both tiers drive the SAME per-layer launch granularity — XLA rounds
 bf16 intermediates at jit boundaries, so equal granularity makes generated
 tokens bit-identical between them (EXPERIMENTS.md §Serving).
 
+With ``async_prefetch=True`` the prefetch restore runs on a background
+worker: ``_drain_prefetch`` allocates target slots on the main thread,
+hands the ``decompress_many`` dispatch to the worker, and the next access
+group's ``_ensure_resident`` is the deterministic barrier that joins the
+worker and installs the restored blocks into the pool BEFORE any kernel
+reads them — so the decompression overlaps the previous layer's attention
+launch while paged-vs-dense stays bit-identical (the pool contents at
+every kernel launch are exactly the sync path's).
+
 The compiled single-graph serve paths for roofline purposes are
 launch/steps.py:make_decode_step / make_paged_decode_step; this engine is
 the correctness harness and example driver.
@@ -28,6 +37,7 @@ the correctness harness and example driver.
 from __future__ import annotations
 
 import dataclasses
+import threading
 
 import jax
 import jax.numpy as jnp
@@ -50,7 +60,8 @@ class ServingEngine:
                  budget_blocks: int = 1024,
                  kv_decoder: str = "auto", kv_backend: str = "auto",
                  kv_mesh=None, kv_batch_axis=None,
-                 kv_prefetch: bool = True, prefetch_lookahead: int = 1):
+                 kv_prefetch: bool = True, prefetch_lookahead: int = 1,
+                 async_prefetch: bool = False):
         self.cfg = cfg
         self.params = params
         self.max_len = max_len
@@ -59,6 +70,13 @@ class ServingEngine:
         self.budget_blocks = budget_blocks
         self.kv_prefetch = kv_prefetch
         self.prefetch_lookahead = prefetch_lookahead
+        # async_prefetch: run the prefetch restore (decompress_many + host
+        # reshape) on a background worker; the next access group's
+        # _ensure_resident is the barrier that installs the result before
+        # any kernel reads it (bit-identical to the sync path by
+        # construction — same blocks, same pool state at every launch)
+        self.async_prefetch = async_prefetch
+        self._pf_pending = None
         # kv_backend / kv_decoder: compressor/decoder registry keys for the
         # cold-block eviction and restore dispatches ("auto" = the
         # single-kernel fused-mono pair on TPU: one Pallas launch per
@@ -118,7 +136,7 @@ class ServingEngine:
             jnp.zeros((), common.dtype_of(cfg))
         ).dtype
         self._gen_id = 0
-        self._stats = {"demand_restores": 0}
+        self._stats = {"demand_restores": 0, "async_prefetch_batches": 0}
 
     # ------------------------------------------------- paged-tier host side
 
@@ -140,6 +158,7 @@ class ServingEngine:
     def _begin_paged(self, batch, horizon):
         cfg = self.cfg
         ell = cfg.num_layers
+        self._join_prefetch()  # a stale worker must never outlive its pool
         self._batch = batch
         self._horizon = horizon
         n_logical = -(-horizon // self.block_tokens)
@@ -173,11 +192,17 @@ class ServingEngine:
         self._ever = set()       # every key ever materialized (working set)
         self._pq = PrefetchQueue(lookahead=self.prefetch_lookahead)
         self.tracker = PagedKVTracker(self.block_tokens, self.budget_blocks)
+        # static block geometry, captured once so the async worker never
+        # reads self._pool (whose buffers the layer step donates)
+        bt = self.block_tokens
+        kvh, dh = self._pool["k"].shape[2], self._pool["k"].shape[3]
+        self._blk_shape = (bt, kvh, dh)
+        self._blk_half = bt * kvh * dh * self._np_kv_dtype.itemsize
         self._gen_id += 1
         for k in self.kv_store.keys():  # drop stale-generation blocks
             if isinstance(k, tuple) and len(k) == 4 and k[0] != self._gen_id:
                 self.kv_store.discard(k)
-        self._stats = {"demand_restores": 0}
+        self._stats = {"demand_restores": 0, "async_prefetch_batches": 0}
 
     def _evict_blocks(self, victims):
         """Compress + free a batch of resident blocks (one dispatch)."""
@@ -202,25 +227,22 @@ class ServingEngine:
             self.tracker.drop(key)
             self._prefetched.discard(key)
 
-    def _restore_blocks(self, keys, *, prefetch=False):
-        """Decompress stored blocks into fresh slots (one dispatch round,
-        one pool scatter per direction)."""
-        if not keys:
-            return
-        slots = [self._alloc.alloc() for _ in keys]
-        blobs = self.kv_store.restore_many(
-            [self._store_key(k) for k in keys]
-        )
-        bt = self.block_tokens
-        kvh, dh = self._pool["k"].shape[2], self._pool["k"].shape[3]
-        half = bt * kvh * dh * self._np_kv_dtype.itemsize
-        shape = (bt, kvh, dh)
+    def _stack_blobs(self, blobs):
+        """Host-side reshape of restored blobs into K/V stacks.  Reads only
+        static geometry (``_blk_shape``/``_blk_half``), so it is safe on
+        the async prefetch worker while the main thread owns the pool."""
+        half, shape = self._blk_half, self._blk_shape
         kstack = np.stack([
             b[:half].view(self._np_kv_dtype).reshape(shape) for b in blobs
         ])
         vstack = np.stack([
             b[half:].view(self._np_kv_dtype).reshape(shape) for b in blobs
         ])
+        return kstack, vstack
+
+    def _install_blocks(self, keys, slots, kstack, vstack, *, prefetch):
+        """Scatter restored blocks into their (pre-allocated) slots and
+        publish the mapping.  Main thread only."""
         idx = jnp.asarray(np.array(slots))
         self._pool["k"] = self._pool["k"].at[idx].set(jnp.asarray(kstack))
         self._pool["v"] = self._pool["v"].at[idx].set(jnp.asarray(vstack))
@@ -234,6 +256,34 @@ class ServingEngine:
                 self._prefetched.add(key)
         if prefetch:
             self._pq.issued += len(keys)
+
+    def _restore_blocks(self, keys, *, prefetch=False):
+        """Decompress stored blocks into fresh slots (one dispatch round,
+        one pool scatter per direction)."""
+        if not keys:
+            return
+        slots = [self._alloc.alloc() for _ in keys]
+        blobs = self.kv_store.restore_many(
+            [self._store_key(k) for k in keys]
+        )
+        kstack, vstack = self._stack_blobs(blobs)
+        self._install_blocks(keys, slots, kstack, vstack, prefetch=prefetch)
+
+    def _join_prefetch(self):
+        """Deterministic barrier for the async prefetch worker: wait for
+        the in-flight restore, install its blocks, re-raise its error.
+        Called before ANY pool/table/store mutation or read can observe
+        prefetch state, so async-on and sync-on see identical pool
+        contents at every kernel launch."""
+        pending, self._pf_pending = self._pf_pending, None
+        if pending is None:
+            return
+        th, box, keys, slots = pending
+        th.join()
+        if "err" in box:
+            raise box["err"]
+        kstack, vstack = box["kv"]
+        self._install_blocks(keys, slots, kstack, vstack, prefetch=True)
 
     def _retire_dead_blocks(self, layer, lo):
         """Free SWA blocks that slid wholly out of the attention window —
@@ -255,6 +305,7 @@ class ServingEngine:
         """Make every block layer ``layer`` touches at ``pos`` resident:
         evict LRU non-needed blocks for room, restore stored blocks in one
         batched dispatch, allocate zero-history slots for new blocks."""
+        self._join_prefetch()  # barrier: async restores land before any use
         needed = self._needed_blocks(layer, pos)
         if needed[0] > 0:
             self._retire_dead_blocks(layer, needed[0])
@@ -315,7 +366,14 @@ class ServingEngine:
     def _drain_prefetch(self, layer, pos):
         """Restore queued predicted-hot blocks.  Best-effort: evicts only
         LRU blocks outside the imminent working set, never raises — a full
-        pool just drops the remainder of the queue for this round."""
+        pool just drops the remainder of the queue for this round.
+
+        Async mode: slots are allocated and victims evicted here (main
+        thread owns allocator/pool), then the decompress dispatch runs on
+        a background worker so it overlaps the just-launched layer's
+        attention; ``_join_prefetch`` installs the result at the next
+        access group's barrier."""
+        self._join_prefetch()
         targets = [k for k in self._pq.pop_all() if k in self._stored]
         if not targets:
             return
@@ -330,9 +388,27 @@ class ServingEngine:
             self._evict_blocks(
                 self.tracker.candidates(deficit, protected=protected)
             )
-        self._restore_blocks(
-            targets[: self._alloc.free_blocks], prefetch=True
-        )
+        take = targets[: self._alloc.free_blocks]
+        if not take:
+            return
+        if not self.async_prefetch:
+            self._restore_blocks(take, prefetch=True)
+            return
+        slots = [self._alloc.alloc() for _ in take]
+        store_keys = [self._store_key(k) for k in take]
+        box = {}
+
+        def work():
+            try:
+                blobs = self.kv_store.restore_many(store_keys)
+                box["kv"] = self._stack_blobs(blobs)
+            except BaseException as exc:  # surfaced at the join barrier
+                box["err"] = exc
+
+        th = threading.Thread(target=work, name="kv-prefetch", daemon=True)
+        self._pf_pending = (th, box, take, slots)
+        self._stats["async_prefetch_batches"] += 1
+        th.start()
 
     def paging_stats(self) -> dict:
         """Capacity-tier counters for the last/current generate() call."""
@@ -342,6 +418,7 @@ class ServingEngine:
         s["prefetch_issued"] = pq.issued if pq is not None else 0
         s["prefetch_hits"] = pq.hits if pq is not None else 0
         s["budget_blocks"] = self.budget_blocks
+        s["async_prefetch"] = self.async_prefetch
         s["high_water"] = alloc.high_water if alloc is not None else 0
         s["resident_blocks"] = alloc.allocated if alloc is not None else 0
         s["working_set_blocks"] = len(getattr(self, "_ever", ()))
@@ -392,4 +469,6 @@ class ServingEngine:
             outs.append(np.asarray(toks))
             if eos_id >= 0 and bool(jnp.all(toks == eos_id)):
                 break
+        if paged:
+            self._join_prefetch()  # no worker outlives the generate call
         return GenerationResult(tokens=np.stack(outs, axis=1), steps=n_steps)
